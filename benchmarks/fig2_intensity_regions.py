@@ -1,0 +1,43 @@
+"""Fig. 2 — normalized arithmetic intensity vs N_F (DeepSeek-V3 on H800).
+
+Reproduces both curves (continuous upper bound and discretized) and the
+four regime boundaries, validating the paper's N_F=2 scale-up-bound example
+(TopK/N_F = 4 > 160/50 = 3.2) and the knees at N_F = TopK = 8 and
+N_F = 32 (one local expert).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import comm_roofline as cr
+from repro.core.budget import Scenario, stage_budget
+from repro.core.hardware import get_hardware
+from repro.core.modelspec import get_model
+
+
+def main() -> None:
+    model = get_model("DeepSeek-V3")
+    hw = get_hardware("H800")
+    t0 = time.perf_counter()
+    pts = cr.intensity_sweep(model, hw, Scenario(), n_f_max=64)
+    us = (time.perf_counter() - t0) * 1e6 / len(pts)
+
+    peak = max(p.intensity for p in pts)
+    bounds = cr.regime_boundaries(model, hw)
+    print("name,us_per_call,derived")
+    print(f"fig2_sweep,{us:.2f},points={len(pts)}")
+    print(f"fig2_regime_scale_up_max_nf,0,{bounds['scale_up_bound_max_nf']}")
+    print(f"fig2_regime_scale_out_min_nf,0,{bounds['scale_out_bound_min_nf']}")
+    print(f"fig2_regime_max_intensity_min_nf,0,"
+          f"{bounds['max_intensity_min_nf']}")
+    for p in pts:
+        if p.n_f in (1, 2, 4, 8, 16, 32, 64):
+            print(f"fig2_nf_{p.n_f},0,"
+                  f"I_norm={p.intensity/peak:.4f};regime={p.regime};"
+                  f"local_experts={p.local_experts};"
+                  f"b_rank={p.b_rank:.0f}")
+
+
+if __name__ == "__main__":
+    main()

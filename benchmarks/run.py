@@ -1,0 +1,48 @@
+"""Run every benchmark (one per paper table/figure).
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run fig4 fig6  # substring filter
+
+Each module prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    "benchmarks.fig2_intensity_regions",
+    "benchmarks.fig3_grouped_gemm",
+    "benchmarks.fig4_hfu_bounds",
+    "benchmarks.table2_overlap",
+    "benchmarks.fig6_imbalance",
+    "benchmarks.appendixA_superpod",
+    "benchmarks.afd_vs_ep_system",
+    "benchmarks.ablation_overlap_capacity",
+]
+
+
+def main() -> None:
+    filters = [a for a in sys.argv[1:] if not a.startswith("-")]
+    failures = 0
+    for name in MODULES:
+        if filters and not any(f in name for f in filters):
+            continue
+        print(f"### {name}")
+        t0 = time.time()
+        try:
+            mod = __import__(name, fromlist=["main"])
+            mod.main()
+            print(f"### {name} done in {time.time()-t0:.1f}s\n")
+        except Exception:
+            traceback.print_exc()
+            failures += 1
+            print(f"### {name} FAILED\n")
+    if failures:
+        raise SystemExit(f"{failures} benchmark(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Kimi-K2 (1T total, 32B active) — trillion-param MoE, 384 experts top-8.
+[arXiv:2501.kimi2 / paper Table 4]
+
+The paper's own flagship example: fine-grained experts (M = 2048, H/M = 3.5)
+and extreme sparsity (384/8 = 48) put it squarely in the AFD dead zone on
+standard clusters (paper §3.2). One leading dense layer; one shared expert.
+
+d_head = 112 (64 query heads × 112 = 7168); GQA kv = 8.
+"""
+
+import dataclasses
+
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    d_head=112,
+    d_ff=18432,                 # the single dense layer's FFN width
+    vocab_size=163840,
+    n_experts=384,
+    top_k=8,
+    moe_d_ff=2048,
+    n_shared_experts=1,
+    shared_d_ff=2048,
+    moe_layer_offset=1,         # layer 0 dense, layers 1..60 MoE
+    moe_layer_period=1,
+    rope_theta=5e4,
+    dtype="bfloat16",
+    param_dtype="bfloat16",
+)
+
+
+def smoke_config() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=3, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+        d_ff=160, vocab_size=256, n_experts=8, top_k=2, moe_d_ff=32,
+        shared_d_ff=32, dtype="float32", param_dtype="float32")

@@ -1,0 +1,27 @@
+"""Qwen1.5-0.5B — dense, MHA (kv=16), QKV bias. [hf:Qwen/Qwen1.5-0.5B]"""
+
+import dataclasses
+
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen1.5-0.5b",
+    family="dense",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=2816,
+    vocab_size=151936,
+    qkv_bias=True,
+    rope_theta=1e6,
+    tie_embeddings=True,
+    dtype="bfloat16",
+    param_dtype="bfloat16",
+)
+
+
+def smoke_config() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_head=16,
+        d_ff=128, vocab_size=256, dtype="float32", param_dtype="float32")

@@ -1,0 +1,14 @@
+"""The paper's contribution: budget-based, communication-extended roofline
+analysis of Attention-FFN Disaggregation (AFD) vs large-scale EP.
+
+Modules: hardware (Table 5), modelspec (Table 4 + assigned archs),
+budget (Eqs. 1-8), comm_roofline (Eqs. 9-10 / Fig. 2), hfu_bound (Fig. 4 /
+Appendix A), imbalance (Eqs. 11-16 / Fig. 6), overlap (Table 2 / Fig. 1b),
+planner (§4 as policy).
+"""
+
+from repro.core import (budget, comm_roofline, hardware, hfu_bound,
+                        imbalance, modelspec, overlap, planner)
+
+__all__ = ["budget", "comm_roofline", "hardware", "hfu_bound", "imbalance",
+           "modelspec", "overlap", "planner"]

@@ -1,0 +1,238 @@
+"""Pallas TPU grouped GEMM — the paper's central operator (Fig. 3).
+
+Contract (matches `ref.grouped_gemm_ref` and `jax.lax.ragged_dot`):
+
+    out (M, N) = grouped_gemm(lhs (M, K), rhs (G, K, N), group_sizes (G,))
+
+Rows of ``lhs`` are sorted by group: group g owns the contiguous row range
+[offsets[g], offsets[g+1]). Rows past sum(group_sizes) produce zeros.
+
+TPU adaptation of the CUDA grouped-GEMM idea (DESIGN.md §3): instead of one
+kernel launch per expert (CUTLASS-style), a single kernel iterates
+MXU-aligned (tile_m × tile_n) output tiles. Because fine-grained experts
+make group boundaries land mid-tile (the paper's "fan-out effect"), the
+grid is built over *visits* — (m-tile, group) intersection pairs — so a
+tile crossed by multiple groups is visited once per group with row masking,
+and no padding compute is wasted on expert boundaries:
+
+  * scalar-prefetch arrays ``visit_m``/``visit_g`` steer the BlockSpec
+    index_maps (which lhs row-tile and which expert's weight block to DMA
+    into VMEM);
+  * an f32 VMEM scratch accumulates across the K dimension and across
+    consecutive visits that share an m-tile;
+  * the accumulator flushes to HBM on the last visit of each tile.
+
+VMEM budget per grid step: lhs tile (tile_m × tile_k) + rhs block
+(tile_k × tile_n) + f32 accumulator (tile_m × tile_n) — with the default
+128×128×512 tiling ≈ 0.5 MB, comfortably inside the ~16 MB v5e VMEM so the
+pipeline can double-buffer.
+
+Validated in interpret mode on CPU against ``ref.grouped_gemm_ref`` over
+shape/dtype sweeps (tests/test_kernels_grouped_gemm.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+def build_visits(group_sizes: jax.Array, m: int, tile_m: int,
+                 n_groups: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Compute (visit_m, visit_g, offsets) with static visit count.
+
+    A visit is one (m-tile, group) pair whose row ranges intersect. The
+    static worst case is n_tiles + n_groups - 1 visits (every group boundary
+    splits one tile). Surplus slots are filled with duplicate (tile, group)
+    pairs whose row mask is empty — they add zeros.
+
+    All arithmetic is jnp (shape-polymorphic in values, static in shapes) so
+    the builder can live inside a jit'd wrapper.
+    """
+    n_tiles = _cdiv(m, tile_m)
+    v_max = n_tiles + n_groups - 1
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(group_sizes).astype(jnp.int32)])
+    # For visit index v, we need the v-th (tile, group) intersection in
+    # lexicographic (tile, group) order. Count visits per tile:
+    #   tile t spans rows [t·tm, (t+1)·tm); groups intersecting it are those
+    #   with offsets[g] < (t+1)·tm and offsets[g+1] > t·tm.
+    # first_group[t] = max g such that offsets[g] <= t·tm (with empty groups
+    # skipped naturally by the mask), n_visits[t] = count.
+    tiles = jnp.arange(n_tiles, dtype=jnp.int32)
+    tile_lo = tiles * tile_m
+    tile_hi = jnp.minimum(tile_lo + tile_m, m)
+    # group of the first row in the tile (searchsorted right gives the group
+    # whose range contains the row; empty groups resolve to later groups)
+    first_group = jnp.searchsorted(offsets[1:], tile_lo, side="right"
+                                   ).astype(jnp.int32)
+    first_group = jnp.minimum(first_group, n_groups - 1)
+    last_group = jnp.searchsorted(offsets[1:], tile_hi - 1, side="right"
+                                  ).astype(jnp.int32)
+    last_group = jnp.minimum(last_group, n_groups - 1)
+    n_visits = last_group - first_group + 1                    # (n_tiles,)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(n_visits).astype(jnp.int32)])
+    total = starts[-1]
+    v_idx = jnp.arange(v_max, dtype=jnp.int32)
+    # For each v: which tile? (searchsorted over starts); surplus v -> last.
+    vm = jnp.searchsorted(starts[1:], v_idx, side="right").astype(jnp.int32)
+    vm = jnp.minimum(vm, n_tiles - 1)
+    vg = first_group[vm] + (v_idx - starts[vm])
+    # Surplus slots (v >= total): clamp to a valid (tile, group) pair with an
+    # empty mask — reuse the tile's first group but mark via vg clamp; the
+    # kernel masks rows by [offsets[g], offsets[g+1]) ∩ tile, and for
+    # duplicated pairs the accumulation of the same group twice must be
+    # avoided, so point them at group n_groups-1 row-range ∩ tile which is
+    # empty for all but the last tile; to be safe use an explicit
+    # empty marker: vg = n_groups (kernel masks everything out).
+    vg = jnp.where(v_idx < total, vg, n_groups)
+    vg = jnp.minimum(vg, n_groups).astype(jnp.int32)
+    return vm, vg, offsets
+
+
+def _kernel(visit_m, visit_g, offsets,     # scalar-prefetch refs
+            lhs_ref, rhs_ref, out_ref,     # VMEM blocks
+            acc_ref,                       # f32 VMEM scratch
+            *, tile_m: int, n_groups: int, m_total: int,
+            n_k_tiles: int, out_dtype, scale_ref=None):
+    v = pl.program_id(1)
+    kt = pl.program_id(2)
+    n_visits = pl.num_programs(1)
+
+    g = visit_g[v]
+    mt = visit_m[v]
+
+    # First (visit, k-tile) touching this output block initialises the
+    # accumulator. Visits sharing an m-tile are consecutive in v.
+    is_first_visit = jnp.logical_or(v == 0, visit_m[jnp.maximum(v - 1, 0)] != mt)
+
+    @pl.when(jnp.logical_and(is_first_visit, kt == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Row mask: rows of this tile belonging to group g.
+    rows = mt * tile_m + jax.lax.broadcasted_iota(jnp.int32, (tile_m, 1), 0)
+    valid = jnp.logical_and(g < n_groups, rows < m_total)
+    lo = offsets[jnp.minimum(g, n_groups - 1)]
+    hi = offsets[jnp.minimum(g + 1, n_groups)]
+    mask = jnp.logical_and(valid,
+                           jnp.logical_and(rows >= lo, rows < hi))
+
+    x = jnp.where(mask, lhs_ref[...], jnp.zeros_like(lhs_ref))
+    w = rhs_ref[0]
+    if scale_ref is not None:
+        # int8 weight-only quantization: dequantise the VMEM tile with the
+        # per-expert scale. HBM→VMEM weight traffic halves vs bf16 — the
+        # §Perf H1 "memory-floor" lever (EXPERIMENTS.md).
+        w = w.astype(jnp.float32) * scale_ref[0]
+    acc_ref[...] += jnp.dot(x.astype(jnp.float32) if scale_ref is not None
+                            else x, w, preferred_element_type=jnp.float32)
+
+    # Flush on the last (visit, k-tile) for this m-tile.
+    is_last_visit = jnp.logical_or(
+        v == n_visits - 1, visit_m[jnp.minimum(v + 1, n_visits - 1)] != mt)
+
+    @pl.when(jnp.logical_and(is_last_visit, kt == n_k_tiles - 1))
+    def _flush():
+        out_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def grouped_gemm_pallas(lhs: jax.Array, rhs: jax.Array,
+                        group_sizes: jax.Array,
+                        *, tile_m: int = 128, tile_n: int = 128,
+                        tile_k: Optional[int] = 512,
+                        out_dtype=None,
+                        scales: Optional[jax.Array] = None,
+                        interpret: bool = True) -> jax.Array:
+    """Grouped GEMM via the visit-steered Pallas kernel.
+
+    ``scales`` (G,) enables int8 weight-only quantization: ``rhs`` holds
+    int8 codes and the kernel dequantises each expert's VMEM tile with its
+    per-expert scale (out = lhs · (rhs·scale[g])).
+
+    ``interpret=True`` (the default in this CPU container) runs the kernel
+    body in the Pallas interpreter; on real TPU pass ``interpret=False``.
+    """
+    m, k = lhs.shape
+    g, k2, n = rhs.shape
+    assert k == k2, (lhs.shape, rhs.shape)
+    assert group_sizes.shape == (g,)
+    out_dtype = out_dtype or lhs.dtype
+
+    tile_m = min(tile_m, m)
+    tile_n = min(tile_n, n)
+    tile_k = k if tile_k is None else min(tile_k, k)
+    # Pad every dim to its tile multiple (zero padding is compute-safe).
+    m_pad = _cdiv(m, tile_m) * tile_m
+    n_pad = _cdiv(n, tile_n) * tile_n
+    k_pad = _cdiv(k, tile_k) * tile_k
+    lhs_p = jnp.pad(lhs, ((0, m_pad - m), (0, k_pad - k)))
+    rhs_p = jnp.pad(rhs, ((0, 0), (0, k_pad - k), (0, n_pad - n)))
+
+    visit_m, visit_g, offsets = build_visits(group_sizes, m, tile_m, g)
+    n_visits = int(visit_m.shape[0])
+    n_k_tiles = k_pad // tile_k
+    grid = (n_pad // tile_n, n_visits, n_k_tiles)
+
+    kernel = functools.partial(
+        _kernel, tile_m=tile_m, n_groups=g, m_total=m,
+        n_k_tiles=n_k_tiles, out_dtype=out_dtype)
+    if scales is not None:
+        def kernel(vm, vg, off, lhs_ref, rhs_ref, scale_ref, out_ref,
+                   acc_ref):
+            return _kernel(vm, vg, off, lhs_ref, rhs_ref, out_ref, acc_ref,
+                           tile_m=tile_m, n_groups=g, m_total=m,
+                           n_k_tiles=n_k_tiles, out_dtype=out_dtype,
+                           scale_ref=scale_ref)
+
+    in_specs = [
+        pl.BlockSpec((tile_m, tile_k),
+                     lambda j, v, kt, vm, vg, off: (vm[v], kt)),
+        # vg == g marks an empty surplus visit; clamp the DMA index
+        # into range — the kernel's row mask zeroes its contribution.
+        pl.BlockSpec((1, tile_k, tile_n),
+                     lambda j, v, kt, vm, vg, off:
+                     (jnp.minimum(vg[v], g - 1), kt, j)),
+    ]
+    operands = [visit_m, visit_g, offsets, lhs_p, rhs_p]
+    if scales is not None:
+        in_specs.append(pl.BlockSpec(
+            (1,), lambda j, v, kt, vm, vg, off:
+            (jnp.minimum(vg[v], g - 1),)))
+        operands.append(scales.astype(jnp.float32))
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((tile_m, tile_n),
+                                   lambda j, v, kt, vm, vg, off: (vm[v], j)),
+            scratch_shapes=[pltpu.VMEM((tile_m, tile_n), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), out_dtype),
+        interpret=interpret,
+    )(*operands)
+    return out[:m, :n]
+
+
+def quantize_experts(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-expert symmetric int8 quantization: w ≈ codes · scale[g]."""
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=(1, 2))
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    codes = jnp.clip(jnp.round(w.astype(jnp.float32) /
+                               scale[:, None, None]), -127, 127
+                     ).astype(jnp.int8)
+    return codes, scale

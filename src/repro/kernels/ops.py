@@ -1,0 +1,140 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Every op has three interchangeable implementations:
+
+  * ``pallas`` — the TPU kernel (interpret-mode on this CPU container).
+  * ``xla``    — the best XLA-native lowering (``lax.ragged_dot`` for the
+    grouped GEMM, masked einsum for decode attention). This is what the
+    full-scale dry-run lowers, so cost_analysis prices a real path.
+  * ``ref``    — the pure-jnp oracle (kernels/ref.py).
+
+``default_impl()`` picks ``xla`` on CPU (interpret-mode Pallas is an
+emulator, far too slow at production shapes) and ``pallas`` on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.grouped_gemm import grouped_gemm_pallas
+from repro.kernels.splitkv_attention import splitkv_attention_pallas
+
+_IMPLS = ("pallas", "xla", "ref")
+
+
+def default_impl() -> str:
+    try:
+        platform = jax.devices()[0].platform
+    except Exception:
+        platform = "cpu"
+    return "pallas" if platform == "tpu" else "xla"
+
+
+# ---------------------------------------------------------------------------
+# Grouped GEMM
+# ---------------------------------------------------------------------------
+
+def grouped_gemm(lhs: jax.Array, rhs: jax.Array, group_sizes: jax.Array,
+                 impl: Optional[str] = None,
+                 tile_m: int = 128, tile_n: int = 128,
+                 tile_k: Optional[int] = 512) -> jax.Array:
+    """out[r] = lhs[r] @ rhs[group_of(r)] for group-sorted rows.
+
+    lhs: (M, K); rhs: (G, K, N); group_sizes: (G,) int32 summing to ≤ M
+    (surplus rows produce zeros).
+    """
+    impl = impl or default_impl()
+    if impl == "pallas":
+        interpret = jax.devices()[0].platform != "tpu"
+        return grouped_gemm_pallas(lhs, rhs, group_sizes, tile_m=tile_m,
+                                   tile_n=tile_n, tile_k=tile_k,
+                                   interpret=interpret)
+    if impl == "xla":
+        out = jax.lax.ragged_dot(lhs, rhs, group_sizes.astype(jnp.int32))
+        return out
+    if impl == "ref":
+        return _ref.grouped_gemm_ref(lhs, rhs, group_sizes)
+    raise ValueError(f"impl must be one of {_IMPLS}, got {impl!r}")
+
+
+# ---------------------------------------------------------------------------
+# Split-KV decode attention
+# ---------------------------------------------------------------------------
+
+def splitkv_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      lengths: jax.Array, impl: Optional[str] = None,
+                      chunk: int = 256, return_lse: bool = False):
+    """Single-token GQA attention with per-batch valid lengths.
+
+    q: (B, Hq, d); k, v: (B, T, Hkv, d); lengths: (B,) int32.
+    """
+    impl = impl or default_impl()
+    if impl == "pallas":
+        interpret = jax.devices()[0].platform != "tpu"
+        return splitkv_attention_pallas(q, k, v, lengths, chunk=chunk,
+                                        return_lse=return_lse,
+                                        interpret=interpret)
+    if impl in ("xla", "ref"):
+        out = _ref.splitkv_attention_ref(q, k, v, lengths)
+        if return_lse:
+            lse = _attention_lse(q, k, lengths)
+            return out, lse
+        return out
+    raise ValueError(f"impl must be one of {_IMPLS}, got {impl!r}")
+
+
+# ---------------------------------------------------------------------------
+# Flash prefill attention
+# ---------------------------------------------------------------------------
+
+def flash_prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                            causal: bool = True,
+                            window: Optional[int] = None,
+                            impl: Optional[str] = None,
+                            tile_q: int = 128,
+                            tile_k: int = 256) -> jax.Array:
+    """Tiled online-softmax prefill attention (B, S, Hq, d)."""
+    from repro.kernels.flash_prefill import flash_prefill_pallas
+    impl = impl or default_impl()
+    if impl == "pallas":
+        interpret = jax.devices()[0].platform != "tpu"
+        return flash_prefill_pallas(q, k, v, causal=causal, window=window,
+                                    tile_q=tile_q, tile_k=tile_k,
+                                    interpret=interpret)
+    # XLA / ref: dense masked attention (the models/attention.py chunked
+    # scan is the production XLA path; this is the oracle form)
+    b, s, hq, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, s, hkv, group, d).astype(jnp.float32)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    rows = jnp.arange(s)[:, None]
+    cols = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask = mask & (cols <= rows)
+    if window is not None:
+        mask = mask & (rows - cols < window)
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, hq, d).astype(q.dtype)
+
+
+def _attention_lse(q: jax.Array, k: jax.Array,
+                   lengths: jax.Array) -> jax.Array:
+    b, hq, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, d).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    mask = jnp.arange(t)[None, :] < lengths[:, None]
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    return jax.nn.logsumexp(scores, axis=-1).reshape(b, hq)

@@ -1,0 +1,3 @@
+"""Launchers: production mesh construction, the multi-pod dry-run
+(lower + compile + roofline terms for every arch × shape × mesh cell),
+and the end-to-end train/serve drivers."""

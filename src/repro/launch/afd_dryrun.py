@@ -1,0 +1,280 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""AFD-mode dry-run: the paper's Fig. 1a deployment, lowered at full scale.
+
+For a MoE architecture's decode cell this driver:
+
+  1. splits the pod's 32 nodes into A-role / F-role fleets at node
+     granularity (N_A from the planner's λ, or --n-a-nodes),
+  2. lowers + compiles the A-role per-layer program (attention sublayer +
+     router + shared expert) on the A-mesh and the F-role program (the
+     routed grouped-GEMM FFN given gating) on the F-mesh,
+  3. derives per-stage latencies t_a, t_f from each role's roofline terms
+     and t_c from the paper's Eq. 9/17 wire model over the M2N bytes the
+     programs exchange,
+  4. feeds (t_a, t_f, t_c) into the §2.2 budget machinery and the 3BO
+     pipeline simulator to report the AFD-mode HFU/S_t of OUR system —
+     directly comparable to (a) the same cell's EP-mode roofline and
+     (b) the paper's analytical upper bound (core.hfu_bound) for the
+     equivalent TPU "hardware platform".
+
+    PYTHONPATH=src python -m repro.launch.afd_dryrun --arch kimi-k2-1t-a32b
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.core import budget as bdg
+from repro.core import overlap as ov
+from repro.core.hardware import (TPU_V5E_HBM_BW, TPU_V5E_ICI_BW,
+                                 TPU_V5E_PEAK_FLOPS)
+from repro.kernels import ops as kops
+from repro.launch import hlo_analysis as hlo
+from repro.launch.mesh import CHIPS_PER_NODE, make_mesh
+from repro.models import attention as attn_mod
+from repro.models import kvcache
+from repro.models import moe as moe_mod
+from repro.models.common import ArchConfig
+from repro.models.layers import apply_mlp, apply_norm, init_mlp, init_norm
+from repro.parallel import sharding as shd
+
+RESULTS = "results/afd_dryrun.json"
+
+
+# ---------------------------------------------------------------------------
+# Role programs
+# ---------------------------------------------------------------------------
+
+def _a_role_layer(cfg: ArchConfig):
+    """One attention-role layer step for a decode micro-batch.
+
+    (params, x (B,1,D), cache, pos) →
+        (x_after_attn, norm'd tokens, gates, shared_out, new_cache)
+    The router runs on the A role (paper §2.2); tokens+gating are the
+    dispatch payload.
+    """
+
+    def fn(lp, x, cache, pos):
+        h = apply_norm(lp["ln1"], cfg, x)
+        mix, new_cache = attn_mod.attention_decode(lp["attn"], cfg, h,
+                                                   cache, pos)
+        x = x + mix
+        hn = apply_norm(lp["ln2"], cfg, x)
+        tokens = hn.reshape(-1, cfg.d_model)
+        _, topw, topi = moe_mod.route(lp["moe"], cfg, tokens)
+        shared = (apply_mlp(lp["moe"]["shared"], cfg, hn)
+                  if cfg.n_shared_experts else jnp.zeros_like(x))
+        return x, tokens, topw, topi, shared, new_cache
+
+    return fn
+
+
+def _f_role_layer(cfg: ArchConfig, int8: bool = False):
+    """F-role routed-expert FFN given gating (the paper's grouped GEMM).
+
+    ``int8``: weight-only quantized residency — expert weights live as
+    int8 codes + per-expert scales (kernels.grouped_gemm.quantize_experts);
+    HBM residency and weight reads halve vs bf16. On TPU the Pallas kernel
+    dequantises tiles in VMEM; the XLA stand-in dequantises inline.
+    """
+
+    def fn(wi, wo, tokens, topw, topi, wi_scale=None, wo_scale=None):
+        sort_idx, inv_idx, gs = moe_mod.sort_by_expert(topi, cfg.n_experts)
+        xs = jnp.take(tokens, sort_idx // cfg.top_k, axis=0)
+        if int8:
+            wi = wi.astype(tokens.dtype) * wi_scale[:, None, None].astype(
+                tokens.dtype)
+            wo = wo.astype(tokens.dtype) * wo_scale[:, None, None].astype(
+                tokens.dtype)
+        h = kops.grouped_gemm(xs, wi.astype(tokens.dtype), gs, impl="xla")
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(gate) * up
+        ys = kops.grouped_gemm(h, wo.astype(tokens.dtype), gs, impl="xla")
+        y = jnp.take(ys, inv_idx, axis=0).reshape(tokens.shape[0],
+                                                  cfg.top_k, -1)
+        return jnp.einsum("nkd,nk->nd", y, topw.astype(tokens.dtype))
+
+    return fn
+
+
+def _role_terms(compiled, chips: int) -> hlo.RooflineTerms:
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, list) else cost
+    return hlo.roofline(cost, hlo.collective_bytes(compiled.as_text()),
+                        chips)
+
+
+def lower_afd(arch: str, batch: int = 128, context: int = 32_768,
+              n_a_nodes: int = 24, n_f_nodes: int = 8,
+              micro_batches: int = 3, int8: bool = False) -> Dict:
+    cfg = configs.get_config(arch)
+    if not cfg.is_moe:
+        raise SystemExit(f"{arch} is dense — AFD inapplicable")
+    a_chips = n_a_nodes * CHIPS_PER_NODE
+    f_chips = n_f_nodes * CHIPS_PER_NODE
+    # A-mesh: TP over 16, rest data; F-mesh: 1-D expert axis.
+    a_mesh = make_mesh((a_chips // 16, 16), ("data", "model"))
+    f_mesh = make_mesh((f_chips,), ("model",))
+
+    # per-micro-batch tokens, padded up to the A-mesh data dim (the 3BO
+    # driver feeds micro_batches slices of the run batch)
+    a_data = a_chips // 16
+    mb = -(-batch // micro_batches)
+    mb = -(-mb // a_data) * a_data
+    key = jax.random.PRNGKey(0)
+
+    # ---- A-role program ----------------------------------------------------
+    layer_shape = jax.eval_shape(
+        lambda k: {
+            "ln1": init_norm(k, "ln1", cfg),
+            "ln2": init_norm(k, "ln2", cfg),
+            "attn": attn_mod.init_attention(k, "attn", cfg),
+            "moe": {
+                "router": jnp.zeros((cfg.d_model, cfg.n_experts),
+                                    jnp.float32),
+                **({"shared": init_mlp(k, "sh", cfg,
+                                       d_ff=cfg.shared_d_ff or cfg.moe_d_ff)}
+                   if cfg.n_shared_experts else {}),
+            },
+        }, key)
+    cache_shape = jax.eval_shape(
+        lambda: kvcache.init_attn_cache(cfg, mb, context))
+    x_shape = jax.ShapeDtypeStruct((mb, 1, cfg.d_model), cfg.compute_dtype)
+    pos_shape = jax.ShapeDtypeStruct((mb,), jnp.int32)
+
+    with a_mesh, shd.activate(a_mesh, shd.SERVE_RULES):
+        p_shard = shd.params_shardings(layer_shape, a_mesh, shd.SERVE_RULES)
+        c_shard = shd.cache_shardings(cache_shape, a_mesh, shd.SERVE_RULES,
+                                      cfg)
+        a_fn = jax.jit(_a_role_layer(cfg),
+                       in_shardings=(p_shard, NamedSharding(a_mesh,
+                                                            P("data")),
+                                     c_shard, NamedSharding(a_mesh,
+                                                            P("data"))))
+        t0 = time.time()
+        a_lowered = a_fn.lower(layer_shape, x_shape, cache_shape, pos_shape)
+        a_compiled = a_lowered.compile()
+        a_time = time.time() - t0
+    a_terms = _role_terms(a_compiled, a_chips)
+
+    # ---- F-role program ----------------------------------------------------
+    w_dtype = jnp.int8 if int8 else cfg.params_dtype
+    wi_shape = jax.ShapeDtypeStruct(
+        (cfg.n_experts, cfg.d_model, 2 * cfg.moe_d_ff), w_dtype)
+    wo_shape = jax.ShapeDtypeStruct(
+        (cfg.n_experts, cfg.moe_d_ff, cfg.d_model), w_dtype)
+    tok_shape = jax.ShapeDtypeStruct((mb, cfg.d_model), cfg.compute_dtype)
+    topw_shape = jax.ShapeDtypeStruct((mb, cfg.top_k), jnp.float32)
+    topi_shape = jax.ShapeDtypeStruct((mb, cfg.top_k), jnp.int32)
+
+    espec = (P("model", None, None) if cfg.n_experts % f_chips == 0
+             else P(None, None, None))
+    with f_mesh:
+        f_args = [wi_shape, wo_shape, tok_shape, topw_shape, topi_shape]
+        f_shards = [NamedSharding(f_mesh, espec),
+                    NamedSharding(f_mesh, espec),
+                    NamedSharding(f_mesh, P()),
+                    NamedSharding(f_mesh, P()),
+                    NamedSharding(f_mesh, P())]
+        if int8:
+            scale_shape = jax.ShapeDtypeStruct((cfg.n_experts,), jnp.float32)
+            f_args += [scale_shape, scale_shape]
+            f_shards += [NamedSharding(f_mesh, P("model")),
+                         NamedSharding(f_mesh, P("model"))]
+        f_fn = jax.jit(_f_role_layer(cfg, int8=int8),
+                       in_shardings=tuple(f_shards))
+        t0 = time.time()
+        f_lowered = f_fn.lower(*f_args)
+        f_compiled = f_lowered.compile()
+        f_time = time.time() - t0
+    f_terms = _role_terms(f_compiled, f_chips)
+
+    # ---- stage latencies + the paper's budget machinery ---------------------
+    t_a = a_terms.total_lower_bound
+    t_f = f_terms.total_lower_bound
+    # M2N wire bytes (Eq. 17-adapted, dtype-accurate): dispatch tokens+gates
+    # A→F, combine outputs F→A; amortized over each role's egress links.
+    itemsize = jnp.dtype(cfg.compute_dtype).itemsize
+    dispatch_bytes = mb * cfg.d_model * itemsize + mb * cfg.top_k * 8
+    combine_bytes = mb * cfg.d_model * itemsize
+    # node-level scale-out links (one ICI/DCN egress per node, as the paper
+    # prices per-GPU NICs); conservative: the slower role pays the wire.
+    link_bw = TPU_V5E_ICI_BW
+    t_dispatch = dispatch_bytes / (min(n_a_nodes, n_f_nodes) *
+                                   CHIPS_PER_NODE * link_bw / 8)
+    t_combine = combine_bytes / (min(n_a_nodes, n_f_nodes) *
+                                 CHIPS_PER_NODE * link_bw / 8)
+
+    st = ov.StageTimes(t_attn=t_a, t_ffn=t_f, t_dispatch=t_dispatch,
+                       t_combine=t_combine)
+    period = ov.afd_3bo_steady_period(st)
+    a_util, f_util = ov.steady_state_utilization("3BO", st, n_layers=24)
+
+    # FFN-stage HFU within the realized period (Eq. 8 on OUR artifact)
+    flops_f = f_terms.flops_dev * f_chips
+    hfu_f = flops_f / (period * f_chips * TPU_V5E_PEAK_FLOPS)
+    ofu_f = flops_f / (max(t_f, 1e-12) * f_chips * TPU_V5E_PEAK_FLOPS)
+
+    f_mem = f_compiled.memory_analysis()
+    return {
+        "arch": arch, "batch": batch, "context": context,
+        "n_a_nodes": n_a_nodes, "n_f_nodes": n_f_nodes,
+        "micro_batches": micro_batches, "int8": int8,
+        "f_weight_bytes_dev": f_mem.argument_size_in_bytes,
+        "a_role": {"chips": a_chips, "compile_s": round(a_time, 1),
+                   "t_compute": a_terms.t_compute,
+                   "t_memory": a_terms.t_memory,
+                   "t_collective": a_terms.t_collective,
+                   "t_stage": t_a, "per_layer": True},
+        "f_role": {"chips": f_chips, "compile_s": round(f_time, 1),
+                   "t_compute": f_terms.t_compute,
+                   "t_memory": f_terms.t_memory,
+                   "t_collective": f_terms.t_collective,
+                   "t_stage": t_f},
+        "m2n": {"dispatch_bytes": dispatch_bytes,
+                "combine_bytes": combine_bytes,
+                "t_dispatch": t_dispatch, "t_combine": t_combine},
+        "pipeline": {"period": period, "a_util": a_util, "f_util": f_util,
+                     "bubble_free": abs(max(t_a, t_f) - period) < 1e-12},
+        "ffn_stage": {"ofu": ofu_f, "s_t": min(t_f / period, 1.0),
+                      "hfu": hfu_f},
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="kimi-k2-1t-a32b")
+    ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--n-a-nodes", type=int, default=24)
+    ap.add_argument("--n-f-nodes", type=int, default=8)
+    ap.add_argument("--int8", action="store_true",
+                    help="int8 weight-only expert residency on the F role")
+    ap.add_argument("--out", default=RESULTS)
+    args = ap.parse_args()
+    rec = lower_afd(args.arch, batch=args.batch, n_a_nodes=args.n_a_nodes,
+                    n_f_nodes=args.n_f_nodes, int8=args.int8)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    try:
+        with open(args.out) as f:
+            all_rec = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        all_rec = {}
+    suffix = ":int8" if args.int8 else ""
+    all_rec[f"{args.arch}|{args.n_a_nodes}A+{args.n_f_nodes}F{suffix}"] = rec
+    with open(args.out, "w") as f:
+        json.dump(all_rec, f, indent=1)
+    print(json.dumps(rec, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,422 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape × mesh) cell this driver
+
+    1. builds the distributed step function (train_step / prefill /
+       serve_step) with explicit pjit shardings and the EP shard_map MoE,
+    2. ``.lower()``s it over ShapeDtypeStruct stand-ins (no allocation),
+    3. ``.compile()``s it — proving the sharding config is coherent,
+    4. records memory_analysis / cost_analysis / per-collective bytes and
+       the §Roofline terms into results/dryrun.json (incremental — reruns
+       skip finished cells unless --force).
+
+The two XLA_FLAGS lines above MUST stay the first statements: jax locks
+the device count at first init, and the production meshes need 512
+placeholder CPU devices. Smoke tests and benchmarks never import this
+module, so they keep seeing 1 device.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                # all cells
+    ... --arch kimi-k2-1t-a32b --shape decode_32k --mesh multi
+    ... --rules serve_nosplitkv    # §Perf baseline variant
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core import modelspec
+from repro.launch import hlo_analysis as hlo
+from repro.launch import shapes as shp
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import make_model
+from repro.parallel import collectives as coll
+from repro.parallel import ep as ep_mod
+from repro.parallel import sharding as shd
+from repro.training import optimizer as opt_mod
+from repro.training.train import TrainConfig, jit_distributed_train_step
+
+RESULTS_DEFAULT = "results/dryrun.json"
+
+RULE_SETS = {
+    "train": shd.TRAIN_RULES,
+    "serve": shd.SERVE_RULES,
+    "serve_nosplitkv": shd.SERVE_RULES_NO_SPLITKV,
+    "train_sp": shd.TRAIN_RULES_SP,
+}
+
+# §Perf variants ("+"-combinable): each toggles one optimization lever so
+# the hillclimb log can price them independently.
+VARIANTS = ("etp", "sp", "donate", "qkf32", "nosplitkv", "ws", "ga4")
+
+
+def _cfg_for_cell(arch: str, spec: shp.ShapeSpec):
+    import dataclasses as dc
+    cfg = configs.get_config(arch)
+    if spec.kind == "train":
+        cfg = dc.replace(cfg, remat=True)
+    return cfg
+
+
+def _ep_config(cfg, spec: shp.ShapeSpec, mesh) -> Optional[ep_mod.EPConfig]:
+    if not cfg.is_moe:
+        return None
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    # batch-1 decode can't shard tokens over dp — replicate instead
+    import numpy as np
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    if spec.kind == "decode" and spec.global_batch % max(dp_size, 1) != 0:
+        dp = ()
+    return ep_mod.EPConfig(mesh=mesh, ep_axis="model", dp_axes=dp,
+                           capacity_factor=1.25 if spec.kind != "decode"
+                           else 2.0)
+
+
+def _compile_variant(cfg, spec: shp.ShapeSpec, mesh, rules, epc,
+                     splitkv: bool, arch: str, donate_cache: bool = False,
+                     qk_f32: bool = False, grad_accum: int = 1):
+    """Lower + compile one config variant; return (compiled, t_lo, t_co)."""
+    from repro.models import attention as attn_mod
+    model = make_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params_shape = jax.eval_shape(model.init, key)
+    batch_shape = shp.batch_specs(cfg, spec)
+    t0 = time.time()
+    ctx_ep = ep_mod.activate(epc) if epc else _nullcontext()
+    old_qk = attn_mod.QK_F32_BARRIER
+    attn_mod.QK_F32_BARRIER = qk_f32
+    try:
+        with mesh, shd.activate(mesh, rules), ctx_ep:
+            if splitkv and spec.kind == "decode" and cfg.n_heads > 0:
+                _install_splitkv(mesh, cfg)
+            if spec.kind == "train":
+                nb = modelspec.ALL_MODELS.get(arch)
+                params_b = (nb.total_params / 1e9) if nb else 1.0
+                opt = opt_mod.optimizer_for(params_b)
+                opt_shape = jax.eval_shape(opt.init, params_shape)
+                jitted, _ = jit_distributed_train_step(
+                    model, opt, params_shape, opt_shape, batch_shape, mesh,
+                    TrainConfig(grad_accum=grad_accum), rules, donate=False)
+                lowered = jitted.lower(params_shape, opt_shape, batch_shape)
+            elif spec.kind == "prefill":
+                p_shard = shd.params_shardings(params_shape, mesh, rules)
+                b_shard = shd.batch_shardings(batch_shape, mesh, rules)
+                fn = jax.jit(
+                    lambda p, b: model.prefill(p, b, max_len=spec.seq_len),
+                    in_shardings=(p_shard, b_shard))
+                lowered = fn.lower(params_shape, batch_shape)
+            else:                                   # decode / serve_step
+                cache_shape = shp.cache_specs(model, spec)
+                p_shard = shd.params_shardings(params_shape, mesh, rules)
+                c_shard = shd.cache_shardings(cache_shape, mesh, rules, cfg)
+                b_shard = shd.batch_shardings(batch_shape, mesh, rules)
+                fn = jax.jit(model.decode_step,
+                             in_shardings=(p_shard, c_shard,
+                                           b_shard["tokens"]),
+                             out_shardings=(None, c_shard),
+                             donate_argnums=(1,) if donate_cache else ())
+                lowered = fn.lower(params_shape, cache_shape,
+                                   batch_shape["tokens"])
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+    finally:
+        attn_mod.set_decode_attention_override(None)
+        attn_mod.QK_F32_BARRIER = old_qk
+    return compiled, t_lower, t_compile
+
+
+def _probe_cfg(cfg, n_periods: int):
+    """Unrolled reduced-depth variant for cost extrapolation.
+
+    cost_analysis counts a lax.scan body ONCE regardless of trip count, so
+    the full (scanned) compile under-reports per-layer FLOPs/bytes. Two
+    unrolled probes at 1 and 2 periods give exact linear extrapolation:
+    metric(n) = m1 + (m2 − m1)·(n − 1).
+    """
+    import dataclasses as dc
+    plan = cfg.layer_plan()
+    n_layers = len(plan.prefix) + n_periods * max(len(plan.period), 1)
+    kw = {"n_layers": min(n_layers, cfg.n_layers), "force_unroll": True}
+    if cfg.n_encoder_layers:
+        kw["n_encoder_layers"] = n_periods
+    return dc.replace(cfg, **kw)
+
+
+def _cost_raw(compiled):
+    """(cost dict, CollectiveStats) of one compiled module."""
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, list) else cost
+    return cost, hlo.collective_bytes(compiled.as_text())
+
+
+def _extrapolate(raw1, raw2, n_periods: int):
+    """metric(n) = m1 + (m2 − m1)·(n − 1) for every cost/collective field."""
+    (cost1, coll1), (cost2, coll2) = raw1, raw2
+    n = max(n_periods, 1)
+
+    def ext(a, b):
+        return max(a + (b - a) * (n - 1), 0.0)
+
+    cost = {"flops": ext(float(cost1.get("flops", 0.0)),
+                         float(cost2.get("flops", 0.0))),
+            "bytes accessed": ext(float(cost1.get("bytes accessed", 0.0)),
+                                  float(cost2.get("bytes accessed", 0.0)))}
+    coll = hlo.CollectiveStats(
+        operand_bytes={k: int(ext(coll1.operand_bytes.get(k, 0),
+                                  coll2.operand_bytes.get(k, 0)))
+                       for k in hlo.COLLECTIVE_OPS},
+        link_bytes={k: int(ext(coll1.link_bytes.get(k, 0),
+                               coll2.link_bytes.get(k, 0)))
+                    for k in hlo.COLLECTIVE_OPS},
+        counts={k: int(ext(coll1.counts.get(k, 0), coll2.counts.get(k, 0)))
+                for k in hlo.COLLECTIVE_OPS})
+    return cost, coll
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               rules_name: Optional[str] = None,
+               splitkv: bool = True, probes: bool = True,
+               variant: str = "") -> Dict:
+    """Lower + compile one cell; return the result record.
+
+    ``variant`` is a "+"-joined set of §Perf levers (see VARIANTS):
+      etp       weight-stationary ETP MoE decode (paper §5.1)
+      sp        sequence-parallel train activations
+      donate    decode-cache buffer donation (in-place KV update)
+      qkf32     f32 Q/K dtype barrier before attention scores
+      nosplitkv disable the split-KV decode override (iteration-0 baseline)
+    """
+    levers = set(v for v in variant.split("+") if v)
+    unknown = levers - set(VARIANTS)
+    assert not unknown, f"unknown variants {unknown}; known: {VARIANTS}"
+    spec = shp.SHAPES[shape_name]
+    cfg = _cfg_for_cell(arch, spec)
+    ok, reason = shp.cell_supported(cfg, shape_name)
+    mesh_name = "multi" if multi_pod else "single"
+    base = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "kind": spec.kind, "variant": variant or "baseline"}
+    if not ok:
+        return {**base, "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = 512 if multi_pod else 256
+    if rules_name:
+        rules = RULE_SETS[rules_name]
+    elif spec.kind == "train":
+        rules = shd.TRAIN_RULES_SP if "sp" in levers else shd.TRAIN_RULES
+    elif "ws" in levers:
+        rules = shd.SERVE_RULES_WS
+    elif "sp" in levers:
+        rules = shd.SERVE_RULES_SP
+    else:
+        rules = (shd.SERVE_RULES_NO_SPLITKV if "nosplitkv" in levers
+                 else shd.SERVE_RULES)
+    epc = _ep_config(cfg, spec, mesh)
+    if epc and "etp" in levers:
+        import dataclasses as dc
+        epc = dc.replace(epc, etp=True)
+    splitkv = splitkv and "nosplitkv" not in levers
+    kw = dict(donate_cache="donate" in levers, qk_f32="qkf32" in levers,
+              grad_accum=4 if "ga4" in levers else 1)
+
+    # 1) the real (scanned) program — THE dry-run artifact: proves the
+    #    sharding config compiles; memory_analysis is exact.
+    compiled, t_lower, t_compile = _compile_variant(
+        cfg, spec, mesh, rules, epc, splitkv, arch, **kw)
+
+    # 2) depth-cost extrapolation via two unrolled probes (scan bodies are
+    #    otherwise counted once by cost_analysis).
+    plan = cfg.layer_plan()
+    if probes and plan.n_periods >= 2:
+        c1, _, _ = _compile_variant(_probe_cfg(cfg, 1), spec, mesh, rules,
+                                    epc, splitkv, arch, **kw)
+        c2, _, _ = _compile_variant(_probe_cfg(cfg, 2), spec, mesh, rules,
+                                    epc, splitkv, arch, **kw)
+        cost, cbytes = _extrapolate(_cost_raw(c1), _cost_raw(c2),
+                                    plan.n_periods)
+    else:
+        cost, cbytes = _cost_raw(compiled)
+    terms = hlo.roofline(cost, cbytes, chips)
+
+    mem = compiled.memory_analysis()
+
+    spec_model = modelspec.ALL_MODELS.get(arch)
+    n_active = (spec_model.total_params if spec_model and
+                spec_model.total_params else cfg.param_count())
+    if cfg.is_moe:
+        n_active = cfg.active_param_count()
+    mflops = hlo.model_flops(n_active, shp.tokens_processed(cfg, spec),
+                             train=spec.kind == "train")
+    mflops_dev = mflops / chips
+    hlo_flops_dev = max(terms.flops_dev, 1.0)
+
+    record = {
+        **base,
+        "status": "ok",
+        "rules": rules_name or ("train" if spec.kind == "train" else "serve"),
+        "chips": chips,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes_dev": mem.argument_size_in_bytes,
+            "output_bytes_dev": mem.output_size_in_bytes,
+            "temp_bytes_dev": mem.temp_size_in_bytes,
+            "code_bytes_dev": mem.generated_code_size_in_bytes,
+            "alias_bytes_dev": mem.alias_size_in_bytes,
+            "peak_bytes_dev": (mem.argument_size_in_bytes +
+                               mem.output_size_in_bytes +
+                               mem.temp_size_in_bytes -
+                               mem.alias_size_in_bytes),
+            "fits_v5e_16g": (mem.argument_size_in_bytes +
+                             mem.output_size_in_bytes +
+                             mem.temp_size_in_bytes -
+                             mem.alias_size_in_bytes) < 16e9,
+        },
+        "cost": {"flops_dev": terms.flops_dev,
+                 "bytes_dev": terms.bytes_dev},
+        "collectives": {"operand_bytes": cbytes.operand_bytes,
+                        "link_bytes": cbytes.link_bytes,
+                        "counts": cbytes.counts},
+        "roofline": {
+            "t_compute": terms.t_compute,
+            "t_memory": terms.t_memory,
+            "t_collective": terms.t_collective,
+            "dominant": terms.dominant,
+            "compute_fraction": terms.compute_fraction,
+            "model_flops_dev": mflops_dev,
+            "useful_flops_ratio": mflops_dev / hlo_flops_dev,
+            "hint": hlo.improvement_hint(terms),
+        },
+    }
+    return record
+
+
+def _install_splitkv(mesh, cfg) -> None:
+    """Decode-attention strategy: split-KV shard_map when seq shards."""
+    from repro.models import attention as attn_mod
+
+    def override(cfg_l, q, k, v, pos):
+        n_model = mesh.shape.get("model", 1)
+        t = k.shape[1]
+        if cfg_l.sliding_window is not None or t % n_model != 0 or t < 4096:
+            return None
+        out = coll.splitkv_decode_attention(q[:, 0], k, v, pos, mesh,
+                                            axis="model")
+        return out.reshape(out.shape[0], 1, -1)     # (B, 1, Hq·d)
+
+    attn_mod.set_decode_attention_override(override)
+
+
+class _nullcontext:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def load_results(path: str) -> Dict:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        return {"cells": {}}
+
+
+def save_results(path: str, results: Dict) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(results, f, indent=1)
+    os.replace(tmp, path)
+
+
+def cell_key(arch: str, shape: str, mesh: str, rules: Optional[str],
+             splitkv: bool, variant: str = "") -> str:
+    suffix = "" if splitkv else ":nosplitkv"
+    r = f":{rules}" if rules else ""
+    v = f":{variant}" if variant else ""
+    return f"{arch}|{shape}|{mesh}{r}{suffix}{v}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="single arch id (default all)")
+    ap.add_argument("--shape", default=None, choices=list(shp.SHAPES))
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--rules", default=None, choices=list(RULE_SETS))
+    ap.add_argument("--no-splitkv", action="store_true",
+                    help="§Perf baseline: disable split-KV decode")
+    ap.add_argument("--variant", default="",
+                    help="'+'-joined §Perf levers: " + ", ".join(VARIANTS))
+    ap.add_argument("--out", default=RESULTS_DEFAULT)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else configs.ARCH_IDS
+    shapes = [args.shape] if args.shape else list(shp.SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = load_results(args.out)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                mesh_name = "multi" if multi else "single"
+                key = cell_key(arch, shape, mesh_name, args.rules,
+                               not args.no_splitkv, args.variant)
+                if key in results["cells"] and not args.force and \
+                        results["cells"][key].get("status") in ("ok",
+                                                                "skipped"):
+                    print(f"[skip-cached] {key}")
+                    continue
+                print(f"[lower] {key} ...", flush=True)
+                t0 = time.time()
+                try:
+                    rec = lower_cell(arch, shape, multi, args.rules,
+                                     splitkv=not args.no_splitkv,
+                                     variant=args.variant)
+                except Exception as e:
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "status": "error", "error": f"{type(e).__name__}: {e}"}
+                    failures += 1
+                rec["wall_s"] = round(time.time() - t0, 1)
+                results["cells"][key] = rec
+                save_results(args.out, results)
+                status = rec.get("status")
+                if status == "ok":
+                    r = rec["roofline"]
+                    print(f"  ok {rec['wall_s']}s dominant={r['dominant']} "
+                          f"tc={r['t_compute']:.2e} tm={r['t_memory']:.2e} "
+                          f"tl={r['t_collective']:.2e} "
+                          f"peak={rec['memory']['peak_bytes_dev']/1e9:.2f}GB",
+                          flush=True)
+                elif status == "skipped":
+                    print(f"  skipped: {rec['reason']}")
+                else:
+                    print(f"  ERROR: {rec.get('error')}")
+    print(f"done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Assigned input shapes and their ShapeDtypeStruct stand-ins.
+
+Four shapes per LM architecture (task brief):
+    train_4k      seq 4,096   × global_batch 256   (training step)
+    prefill_32k   seq 32,768  × global_batch 32    (inference prefill)
+    decode_32k    one token, KV cache of 32,768 × batch 128 (serve_step)
+    long_500k     one token, context 524,288 × batch 1     (serve_step)
+
+``long_500k`` needs sub-quadratic attention: it runs for the SSM / hybrid /
+sliding-window archs and is SKIPPED (with the reason recorded) for pure
+full-attention models — DESIGN.md §4 lists both sets.
+
+Modality frontends are stubs: the VLM cell carves ``vision_seq`` positions
+out of the sequence budget and supplies patch embeddings; the audio cell
+supplies encoder frame embeddings alongside decoder tokens.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig
+
+I32 = jnp.int32
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str                   # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def supports_long_context(cfg: ArchConfig) -> bool:
+    """Sub-quadratic attention: SSM state, hybrid, or sliding window."""
+    return cfg.ssm_state > 0 or cfg.sliding_window is not None
+
+
+def cell_supported(cfg: ArchConfig, shape_name: str
+                   ) -> Tuple[bool, Optional[str]]:
+    if shape_name == "long_500k" and not supports_long_context(cfg):
+        return False, ("full quadratic attention — long_500k skipped "
+                       "(DESIGN.md §4); runs only for SSM/hybrid/SWA archs")
+    return True, None
+
+
+def batch_specs(cfg: ArchConfig, spec: ShapeSpec,
+                act_dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for the model inputs of one cell."""
+    b = spec.global_batch
+    if spec.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b,), I32)}
+    s = spec.seq_len
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.vision_seq:
+        # vision prefix is carved out of the sequence budget
+        out["tokens"] = jax.ShapeDtypeStruct((b, s - cfg.vision_seq), I32)
+        out["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.vision_seq, cfg.d_model), act_dtype)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), I32)
+    if cfg.is_encdec:
+        out["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), act_dtype)
+    return out
+
+
+def cache_specs(model, spec: ShapeSpec) -> Dict:
+    """ShapeDtypeStruct pytree of the decode-entry cache (pos = seq-1).
+
+    Enc-dec models also carry the prefill-computed cross-KV (static encoder
+    keys/values per decoder layer) so the decode cell prices cross
+    attention too.
+    """
+    cfg = model.cfg
+
+    def build():
+        cache = model.init_cache(spec.global_batch, spec.seq_len)
+        if cfg.is_encdec:
+            plan = cfg.layer_plan()
+            kv = lambda lead: jnp.zeros(
+                lead + (spec.global_batch, cfg.encoder_seq, cfg.n_kv_heads,
+                        cfg.d_head), cfg.compute_dtype)
+            cache["cross_kv"] = {
+                "prefix": [(kv(()), kv(())) for s in plan.prefix
+                           if s.kind == "attn"],
+                "stack": {"k": kv((plan.n_periods,)),
+                          "v": kv((plan.n_periods,))},
+            }
+        return cache
+
+    return jax.eval_shape(build)
+
+
+def tokens_processed(cfg: ArchConfig, spec: ShapeSpec) -> int:
+    """Token count the cell's step processes (for MODEL_FLOPS)."""
+    if spec.kind == "decode":
+        return spec.global_batch
+    return spec.global_batch * spec.seq_len

@@ -1,0 +1,14 @@
+"""Model substrate: pure-functional JAX definitions for the ten assigned
+architectures (dense / MoE / hybrid SSM / pure SSM / VLM-backbone /
+audio enc-dec) plus the paper's own MoE models.
+
+Layout:
+  common.py       ArchConfig, layer plans, init helpers, logical sharding hooks
+  layers.py       norms, RoPE, activations, dense MLP, embeddings
+  attention.py    MHA/GQA (+bias, +qk_norm, +sliding window), prefill & decode
+  moe.py          top-k router, capacity dispatch (oracle) & sort-based grouped path
+  mamba2.py       Mamba-2 SSD mixer: chunked scan (train) + stateful step (decode)
+  kvcache.py      cache pytrees: full KV, sliding-window ring, SSM state, cross-KV
+  transformer.py  block/stack assembly with lax.scan over homogeneous periods
+  model.py        public Model API: init / forward / loss / prefill / decode_step
+"""

@@ -1,0 +1,340 @@
+"""Shared model machinery: ArchConfig, layer plans, initializers, and
+logical-axis sharding hooks.
+
+The config is a single dataclass wide enough for every assigned family.
+``layer_plan()`` factors the depth dimension into ``prefix`` layers
+(heterogeneous, unrolled) plus ``n_periods`` repetitions of a homogeneous
+``period`` (scanned with ``jax.lax.scan`` over stacked params) — this keeps
+HLO size independent of depth, which is what makes the 61-layer Kimi-K2
+dry-run compile in reasonable time.
+
+Sharding is expressed with *logical axis names* on every parameter and
+activation; ``parallel.sharding`` installs the logical→mesh mapping. With no
+mesh installed every hook is a no-op, so single-device tests never touch
+distribution code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Logical-axis sharding hooks
+# ---------------------------------------------------------------------------
+
+# Installed by repro.parallel.sharding.install(); identity by default.
+_constraint_fn: Callable[[jax.Array, Tuple[Optional[str], ...]], jax.Array] = (
+    lambda x, axes: x)
+
+
+def set_constraint_fn(fn) -> None:
+    global _constraint_fn
+    _constraint_fn = fn
+
+
+def reset_constraint_fn() -> None:
+    set_constraint_fn(lambda x, axes: x)
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Annotate ``x`` with logical axis names (one per dim; None = replicated)."""
+    return _constraint_fn(x, tuple(axes))
+
+
+# Canonical logical axis vocabulary (parallel/sharding.py maps these):
+#   batch    — global batch / token-parallel dim  → ("pod", "data")
+#   seq      — sequence (activations)             → None (or "model" for SP)
+#   embed    — d_model features                   → None
+#   heads    — attention q-heads                  → "model"
+#   kv_heads — attention kv-heads                 → "model" when divisible
+#   kv_seq   — KV-cache sequence dim              → "model" (split-KV decode)
+#   mlp      — FFN hidden width                   → "model"
+#   experts  — MoE expert dim                     → "model"
+#   vocab    — output vocabulary                  → "model"
+#   stack    — scanned layer-period dim           → None
+#   fsdp     — parameter sharding dim for FSDP    → "data"
+
+
+# ---------------------------------------------------------------------------
+# Layer plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One decoder layer's structure."""
+    kind: str                   # "attn" | "mamba"
+    moe: bool = False
+
+    def tag(self) -> str:
+        return f"{self.kind}{'_moe' if self.moe else ''}"
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    prefix: Tuple[LayerSpec, ...]
+    period: Tuple[LayerSpec, ...]
+    n_periods: int
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.prefix) + len(self.period) * self.n_periods
+
+    def flat(self) -> List[LayerSpec]:
+        return list(self.prefix) + list(self.period) * self.n_periods
+
+
+# ---------------------------------------------------------------------------
+# ArchConfig
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                 # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int                   # dense-layer FFN width (0 for pure-SSM)
+    vocab_size: int
+    d_head: int = 0             # default d_model // n_heads
+
+    # attention details
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    sliding_window: Optional[int] = None
+    rope_theta: float = 1e4
+    use_rope: bool = True       # False → learned absolute positions (whisper)
+    max_position: int = 1 << 20
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    n_shared_experts: int = 0
+    shared_d_ff: int = 0
+    moe_layer_offset: int = 0   # first MoE layer index
+    moe_layer_period: int = 1
+    router_renorm: bool = True  # renormalise top-k gate weights
+
+    # hybrid / SSM (Mamba-2)
+    attn_layer_offset: int = 0  # for hybrid: which layers are attention
+    attn_layer_period: int = 1  # 1 → every layer is attention
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    ssm_chunk: int = 64
+
+    # encoder-decoder (whisper) — encoder frontend is a stub: input_specs
+    # provides precomputed frame embeddings (B, encoder_seq, d_model).
+    n_encoder_layers: int = 0
+    encoder_seq: int = 0
+
+    # VLM — frontend stub: input_specs provides patch embeddings
+    # (B, vision_seq, d_model) that are prepended to the token embeddings.
+    vision_seq: int = 0
+
+    # misc
+    causal: bool = True         # False → bidirectional (encoder stacks)
+    force_unroll: bool = False  # disable scan (dry-run cost probes)
+    tie_embeddings: bool = False
+    rms_eps: float = 1e-6
+    norm_type: str = "rmsnorm"  # rmsnorm | layernorm
+    act: str = "silu"           # silu | gelu
+    dtype: str = "float32"      # activation/compute dtype
+    param_dtype: str = "float32"
+    moe_capacity_factor: float = 1.25
+    remat: bool = False         # checkpoint each scanned period
+
+    # ---- derived -----------------------------------------------------------
+
+    def __post_init__(self):
+        if self.d_head == 0 and self.n_heads > 0:
+            object.__setattr__(self, "d_head", self.d_model // self.n_heads)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 1
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.n_encoder_layers > 0
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.d_head
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.d_head
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim if self.ssm_head_dim else 0
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.ssm_groups * self.ssm_state
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def params_dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def is_attn_layer(self, i: int) -> bool:
+        if self.ssm_state == 0:
+            return True
+        if self.attn_layer_period <= 0:
+            return False          # pure SSM
+        return i % self.attn_layer_period == self.attn_layer_offset
+
+    def is_moe_layer(self, i: int) -> bool:
+        if not self.is_moe:
+            return False
+        return (i >= self.moe_layer_offset and
+                (i - self.moe_layer_offset) % self.moe_layer_period == 0)
+
+    def layer_spec(self, i: int) -> LayerSpec:
+        kind = "attn" if self.is_attn_layer(i) else "mamba"
+        return LayerSpec(kind=kind, moe=self.is_moe_layer(i))
+
+    def layer_plan(self) -> LayerPlan:
+        """Factor depth into prefix + homogeneous repeated period.
+
+        The period is the smallest p such that layers [s, n) tile with
+        pattern layer_spec(s + j mod p), for the largest possible scanned
+        suffix. We try candidate periods from small to large.
+        """
+        specs = [self.layer_spec(i) for i in range(self.n_layers)]
+        n = self.n_layers
+        best = LayerPlan(prefix=tuple(specs), period=(), n_periods=0)
+        if self.force_unroll:
+            return best
+        # Smallest period wins (smallest HLO); within a period size, the
+        # shortest prefix. Prefix is capped at 8 heterogeneous layers.
+        for p in range(1, min(n, 16) + 1):
+            for s in range(0, min(n, 8) + 1):
+                if (n - s) % p != 0 or (n - s) // p < 2:
+                    continue
+                window = specs[s:s + p]
+                ok = all(specs[s + j] == window[j % p]
+                         for j in range(n - s))
+                if ok:
+                    plan = LayerPlan(prefix=tuple(specs[:s]),
+                                     period=tuple(window),
+                                     n_periods=(n - s) // p)
+                    if (not best.n_periods or
+                            len(plan.prefix) < len(best.prefix)):
+                        best = plan
+                    break
+            if best.n_periods:
+                break
+        return best
+
+    # ---- parameter counting (for feasibility / roofline bookkeeping) -------
+
+    def param_count(self) -> int:
+        D, V = self.d_model, self.vocab_size
+        total = V * D                                   # embedding
+        if not self.tie_embeddings:
+            total += D * V                              # lm head
+        for i in range(self.n_layers):
+            spec = self.layer_spec(i)
+            if spec.kind == "attn":
+                total += D * self.q_dim + 2 * D * self.kv_dim + self.q_dim * D
+                if self.qkv_bias:
+                    total += self.q_dim + 2 * self.kv_dim
+            else:
+                total += (D * (2 * self.d_inner + 2 * self.ssm_groups *
+                               self.ssm_state + self.ssm_heads)
+                          + self.ssm_conv * self.conv_dim + self.conv_dim
+                          + 3 * self.ssm_heads + self.d_inner
+                          + self.d_inner * D)
+            if spec.moe:
+                total += D * self.n_experts             # router
+                total += self.n_experts * 3 * D * self.moe_d_ff
+                if self.n_shared_experts:
+                    total += 3 * D * (self.shared_d_ff or self.moe_d_ff
+                                      ) * self.n_shared_experts
+            elif spec.kind == "attn" and self.d_ff:
+                total += 3 * D * self.d_ff
+            total += 2 * D                              # two norms
+        total += D                                      # final norm
+        if self.is_encdec:
+            total += self.n_encoder_layers * (4 * D * D + 3 * D * self.d_ff
+                                              + 2 * D)
+            total += self.n_layers * (4 * D * D + D)    # cross attention
+            total += self.encoder_seq * D + self.max_decode_positions() * D
+        return total
+
+    def max_decode_positions(self) -> int:
+        return 448 if self.family == "audio" else self.max_position
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: top-k + shared experts only)."""
+        if not self.is_moe:
+            return self.param_count()
+        total = self.param_count()
+        moe_layers = sum(self.is_moe_layer(i) for i in range(self.n_layers))
+        all_experts = moe_layers * self.n_experts * 3 * self.d_model * self.moe_d_ff
+        active = moe_layers * self.top_k * 3 * self.d_model * self.moe_d_ff
+        return total - all_experts + active
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def _key_for(root: jax.Array, name: str) -> jax.Array:
+    """Deterministic per-name key (stable across refactors)."""
+    h = np.uint32(abs(hash(name)) % (1 << 31))
+    return jax.random.fold_in(root, h)
+
+
+def dense_init(key: jax.Array, name: str, shape: Sequence[int],
+               dtype, fan_in: Optional[int] = None) -> jax.Array:
+    fan = fan_in if fan_in is not None else shape[0]
+    scale = 1.0 / math.sqrt(max(fan, 1))
+    return (jax.random.normal(_key_for(key, name), tuple(shape),
+                              jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key: jax.Array, name: str, shape: Sequence[int],
+               dtype) -> jax.Array:
+    return (jax.random.normal(_key_for(key, name), tuple(shape),
+                              jnp.float32) * 0.02).astype(dtype)
+
+
+def zeros_init(_key, _name, shape, dtype) -> jax.Array:
+    return jnp.zeros(tuple(shape), dtype)
+
+
+def ones_init(_key, _name, shape, dtype) -> jax.Array:
+    return jnp.ones(tuple(shape), dtype)
+
+
+Params = Dict[str, object]                  # nested dict pytree of arrays
+
+
+def tree_bytes(params) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(params))
+
+
+def tree_count(params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,175 @@
+"""Basic layers: norms, rotary embeddings, activations, dense MLP, embeddings.
+
+All layers are pure functions ``f(params, cfg, x, ...) -> y`` with explicit
+init functions returning nested-dict params. Compute happens in
+``cfg.compute_dtype``; reductions (norms, softmax) in float32.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (ArchConfig, dense_init, embed_init,
+                                 ones_init, shard, zeros_init)
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(key, name: str, cfg: ArchConfig, dim: Optional[int] = None):
+    d = dim if dim is not None else cfg.d_model
+    p = {"scale": ones_init(key, f"{name}.scale", (d,), cfg.params_dtype)}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = zeros_init(key, f"{name}.bias", (d,), cfg.params_dtype)
+    return p
+
+
+def apply_norm(params, cfg: ArchConfig, x: jax.Array,
+               eps: Optional[float] = None) -> jax.Array:
+    eps = eps if eps is not None else cfg.rms_eps
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm" and "bias" in params:
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32)
+        y = y + params["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def rmsnorm_1d(scale: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMS norm over the last dim with a raw scale vector (qk-norm etc.)."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) *
+            scale.astype(jnp.float32)).astype(dtype)
+
+
+def gated_rmsnorm(scale: jax.Array, x: jax.Array, z: jax.Array,
+                  eps: float = 1e-6) -> jax.Array:
+    """Mamba-2 gated RMSNorm: norm(x * silu(z)) * scale."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) *
+            scale.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(d_head: int, theta: float) -> jax.Array:
+    half = d_head // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, n_heads, d_head); positions: broadcastable to (..., S)."""
+    d_head = x.shape[-1]
+    freqs = rope_frequencies(d_head, theta)                    # (half,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations / MLP
+# ---------------------------------------------------------------------------
+
+def activation(cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    if cfg.act == "gelu":
+        return jax.nn.gelu(x)
+    return jax.nn.silu(x)
+
+
+def init_mlp(key, name: str, cfg: ArchConfig, d_ff: Optional[int] = None):
+    """Gated MLP (SwiGLU family): fused [gate; up] projection + down.
+
+    For gelu (whisper) the layer degenerates to a plain 2-matrix MLP
+    (no gate), matching the original architecture.
+    """
+    d_ff = d_ff if d_ff is not None else cfg.d_ff
+    D = cfg.d_model
+    gated = cfg.act != "gelu"
+    wi_cols = 2 * d_ff if gated else d_ff
+    p = {
+        "wi": dense_init(key, f"{name}.wi", (D, wi_cols), cfg.params_dtype,
+                         fan_in=D),
+        "wo": dense_init(key, f"{name}.wo", (d_ff, D), cfg.params_dtype,
+                         fan_in=d_ff),
+    }
+    if not gated:
+        p["bi"] = zeros_init(key, f"{name}.bi", (wi_cols,), cfg.params_dtype)
+        p["bo"] = zeros_init(key, f"{name}.bo", (D,), cfg.params_dtype)
+    return p
+
+
+def apply_mlp(params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, params["wi"].astype(x.dtype))
+    if "bi" in params:
+        h = h + params["bi"].astype(x.dtype)
+        h = activation(cfg, h)
+    else:
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = activation(cfg, gate) * up
+    h = shard(h, "batch", "seq", "mlp")
+    out = jnp.einsum("...f,fd->...d", h, params["wo"].astype(x.dtype))
+    if "bo" in params:
+        out = out + params["bo"].astype(x.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, cfg: ArchConfig):
+    p = {"tok": embed_init(key, "embed.tok",
+                           (cfg.vocab_size, cfg.d_model), cfg.params_dtype)}
+    if not cfg.use_rope:
+        p["pos"] = embed_init(key, "embed.pos",
+                              (cfg.max_decode_positions(), cfg.d_model),
+                              cfg.params_dtype)
+    return p
+
+
+def embed_tokens(params, cfg: ArchConfig, tokens: jax.Array,
+                 positions: Optional[jax.Array] = None) -> jax.Array:
+    x = jnp.take(params["tok"], tokens, axis=0).astype(cfg.compute_dtype)
+    if "pos" in params and positions is not None:
+        pos_cap = params["pos"].shape[0]
+        pe = jnp.take(params["pos"], jnp.clip(positions, 0, pos_cap - 1),
+                      axis=0).astype(cfg.compute_dtype)
+        x = x + pe
+    return shard(x, "batch", "seq", "embed")
+
+
+def init_lm_head(key, cfg: ArchConfig):
+    if cfg.tie_embeddings:
+        return {}
+    return {"w": dense_init(key, "lm_head.w",
+                            (cfg.d_model, cfg.vocab_size), cfg.params_dtype,
+                            fan_in=cfg.d_model)}
+
+
+def apply_lm_head(head_params, embed_params, cfg: ArchConfig,
+                  x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = embed_params["tok"].T
+    else:
+        w = head_params["w"]
+    logits = jnp.einsum("...d,dv->...v", x, w.astype(x.dtype))
+    return shard(logits.astype(jnp.float32), "batch", "seq", "vocab")

@@ -1,0 +1,265 @@
+"""Mamba-2 (SSD — state-space duality) mixer.
+
+Two execution paths that must agree (property-tested):
+
+  * ``mamba_prefill`` — the chunked SSD algorithm (block-diagonal attention
+    within chunks + low-rank inter-chunk state recurrence), O(S·chunk) and
+    scan-friendly. Produces the final recurrent state for the cache.
+  * ``mamba_decode``  — the O(1)-per-token stateful recurrence used at
+    serving time: conv ring tail + SSM state update.
+
+This is the layer that makes the ``long_500k`` cells tractable for
+mamba2-2.7b and jamba: the decode state is (B, heads, head_dim, d_state),
+independent of context length — the paper's "attention-free" corner where
+AFD's A-role/F-role split degenerates (DESIGN.md §4).
+
+Layout conventions (following the reference Mamba-2):
+  in_proj:  D → [z (d_inner) | xBC (d_inner + 2·g·n) | dt (heads)]
+  conv:     depthwise causal conv over xBC, width ssm_conv
+  heads:    d_inner = heads · head_dim; B/C shared across head groups (g)
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, dense_init, shard, zeros_init
+from repro.models.layers import gated_rmsnorm
+
+
+def init_mamba(key, name: str, cfg: ArchConfig) -> Dict[str, jax.Array]:
+    D = cfg.d_model
+    di = cfg.d_inner
+    h = cfg.ssm_heads
+    proj_out = 2 * di + 2 * cfg.ssm_groups * cfg.ssm_state + h
+    p = {
+        "in_proj": dense_init(key, f"{name}.in_proj", (D, proj_out),
+                              cfg.params_dtype, fan_in=D),
+        "conv_w": dense_init(key, f"{name}.conv_w",
+                             (cfg.ssm_conv, cfg.conv_dim), cfg.params_dtype,
+                             fan_in=cfg.ssm_conv),
+        "conv_b": zeros_init(key, f"{name}.conv_b", (cfg.conv_dim,),
+                             cfg.params_dtype),
+        # A init in [1, 16) → A = -exp(log A) ∈ (-16, -1]
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.ones((di,), cfg.params_dtype),
+        "out_proj": dense_init(key, f"{name}.out_proj", (di, D),
+                               cfg.params_dtype, fan_in=di),
+    }
+    return p
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt: jax.Array):
+    di = cfg.d_inner
+    gn = cfg.ssm_groups * cfg.ssm_state
+    z = zxbcdt[..., :di]
+    x_bc = zxbcdt[..., di:di + di + 2 * gn]
+    dt = zxbcdt[..., di + di + 2 * gn:]
+    return z, x_bc, dt
+
+
+def _split_xbc(cfg: ArchConfig, x_bc: jax.Array):
+    di = cfg.d_inner
+    gn = cfg.ssm_groups * cfg.ssm_state
+    x = x_bc[..., :di]
+    b = x_bc[..., di:di + gn]
+    c = x_bc[..., di + gn:]
+    return x, b, c
+
+
+def causal_conv(cfg: ArchConfig, x: jax.Array, w: jax.Array,
+                b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, S, C); width cfg.ssm_conv (small)."""
+    pad = cfg.ssm_conv - 1
+    s = x.shape[1]
+    xp = jnp.pad(x, ((0, 0), (pad, 0), (0, 0)))
+    out = b.astype(x.dtype)
+    acc = jnp.zeros_like(x)
+    for i in range(cfg.ssm_conv):
+        acc = acc + xp[:, i:i + s] * w[i].astype(x.dtype)
+    return acc + out
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum x[..., j+1..i], -inf above diag."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                c: jax.Array, chunk: int,
+                init_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD — ``lax.scan`` over chunks.
+
+    x:  (B, S, H, P) head inputs        dt: (B, S, H) (already softplus'd)
+    a:  (H,) negative decay rates       b, c: (B, S, H, N) (group-broadcast)
+    Returns (y (B, S, H, P), final_state (B, H, P, N)). S must divide by chunk.
+
+    Each scan step handles one chunk: the intra-chunk block-diagonal term
+    (the "attention-like" L·exp(segsum) product) plus the inter-chunk
+    contribution from the carried state. Peak memory is O(B·H·chunk²) —
+    chunk-count-independent, which is what makes the 32k/500k cells lower
+    without materialising all chunks at once.
+    """
+    bs, s, h, p = x.shape
+    n = b.shape[-1]
+    nc = s // chunk
+    f32 = jnp.float32
+
+    xd = (x * dt[..., None]).astype(f32)                      # dt-weighted input
+    da = (dt * a[None, None, :]).astype(f32)                  # (B, S, H) ≤ 0
+
+    def chunked(t):                                           # (B,S,...)->(nc,B,chunk,...)
+        return jnp.moveaxis(t.reshape(bs, nc, chunk, *t.shape[2:]), 1, 0)
+
+    xc, bc_, cc_ = chunked(xd), chunked(b.astype(f32)), chunked(c.astype(f32))
+    dac = jnp.moveaxis(chunked(da), -1, 2)                    # (nc, B, H, chunk)
+
+    if init_state is None:
+        init_state = jnp.zeros((bs, h, p, n), f32)
+
+    def step(state, inputs):
+        xk, bk, ck, dak = inputs
+        a_cs = jnp.cumsum(dak, axis=-1)                       # (B, H, L)
+        ell = jnp.exp(_segsum(dak))                           # (B, H, L, L)
+        y_diag = jnp.einsum("blhn,bshn,bhls,bshp->blhp", ck, bk, ell, xk)
+        # contribution of the carried state to this chunk's outputs
+        state_decay = jnp.exp(a_cs)                           # (B, H, L)
+        y_off = jnp.einsum("blhn,bhpn,bhl->blhp", ck, state, state_decay)
+        # update carry: decay over the whole chunk + new inputs
+        decay_states = jnp.exp(a_cs[..., -1:] - a_cs)         # (B, H, L)
+        chunk_state = jnp.einsum("blhn,bhl,blhp->bhpn", bk, decay_states, xk)
+        new_state = state * jnp.exp(a_cs[..., -1])[..., None, None] \
+            + chunk_state
+        return new_state, y_diag + y_off
+
+    final_state, ys = jax.lax.scan(step, init_state.astype(f32),
+                                   (xc, bc_, cc_, dac))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bs, s, h, p)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_sequential(x, dt, a, b, c, init_state=None):
+    """Naive per-step recurrence — the correctness oracle for ssd_chunked."""
+    bs, s, h, p = x.shape
+    n = b.shape[-1]
+    state = (jnp.zeros((bs, h, p, n), jnp.float32)
+             if init_state is None else init_state.astype(jnp.float32))
+
+    def step(state, inputs):
+        xt, dtt, bt, ct = inputs                               # (B,H,P),(B,H),(B,H,N)
+        da = jnp.exp(dtt * a[None, :])[..., None, None]        # (B,H,1,1)
+        upd = (dtt[..., None] * xt)[..., None] * bt[:, :, None, :]
+        state = state * da + upd.astype(jnp.float32)
+        y = jnp.einsum("bhpn,bhn->bhp", state, ct.astype(jnp.float32))
+        return state, y
+
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(b, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(c, 1, 0).astype(jnp.float32))
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), state
+
+
+def _broadcast_groups(cfg: ArchConfig, t: jax.Array) -> jax.Array:
+    """(B, S, g·n) → (B, S, H, n) repeating each group over its heads."""
+    bs, s, _ = t.shape
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    t = t.reshape(bs, s, g, n)
+    return jnp.repeat(t, h // g, axis=2)
+
+
+def mamba_prefill(params, cfg: ArchConfig, x: jax.Array,
+                  cache: Optional[Dict[str, jax.Array]] = None
+                  ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Full-sequence SSD. x: (B, S, D). Returns (out, updated cache)."""
+    bs, s, _ = x.shape
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, params["in_proj"].astype(x.dtype))
+    z, x_bc_raw, dt_raw = _split_proj(cfg, zxbcdt)
+
+    x_bc = causal_conv(cfg, x_bc_raw, params["conv_w"], params["conv_b"])
+    x_bc = jax.nn.silu(x_bc)
+    xh, b, c = _split_xbc(cfg, x_bc)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         params["dt_bias"][None, None, :])
+
+    # pad S to the chunk multiple; padded steps get dt=0 (identity decay,
+    # zero input) so states and outputs are unaffected.
+    chunk = min(cfg.ssm_chunk, s) or 1
+    pad = (-s) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+
+    a = -jnp.exp(params["A_log"])
+    xheads = xh.reshape(bs, s + pad, cfg.ssm_heads, cfg.ssm_head_dim)
+    xheads = shard(xheads, "batch", "seq", "heads", None)
+    bh = _broadcast_groups(cfg, b)
+    ch = _broadcast_groups(cfg, c)
+    y, final_state = ssd_chunked(xheads, dt, a, bh, ch, chunk)
+    y = y[:, :s]
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * \
+        xheads[:, :s].astype(y.dtype)
+
+    y = gated_rmsnorm(params["norm"], y.reshape(bs, s, cfg.d_inner), z,
+                      cfg.rms_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"].astype(y.dtype))
+    out = shard(out, "batch", "seq", "embed")
+
+    new_cache = None
+    if cache is not None:
+        tail = cfg.ssm_conv - 1
+        conv_tail = x_bc_raw[:, -tail:] if s >= tail else jnp.concatenate(
+            [cache["conv"][:, s:], x_bc_raw], axis=1)
+        new_cache = {"conv": conv_tail.astype(cache["conv"].dtype),
+                     "state": final_state}
+    return out, new_cache
+
+
+def mamba_decode(params, cfg: ArchConfig, x: jax.Array,
+                 cache: Dict[str, jax.Array]
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """O(1) stateful step. x: (B, 1, D)."""
+    bs = x.shape[0]
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, params["in_proj"].astype(x.dtype))
+    z, x_bc_raw, dt_raw = _split_proj(cfg, zxbcdt)
+
+    # conv ring step
+    window = jnp.concatenate([cache["conv"].astype(x.dtype), x_bc_raw], axis=1)
+    x_bc = jnp.einsum("bkc,kc->bc", window, params["conv_w"].astype(x.dtype))
+    x_bc = jax.nn.silu(x_bc + params["conv_b"].astype(x.dtype))[:, None]
+    new_conv = window[:, 1:]
+
+    xh, b, c = _split_xbc(cfg, x_bc)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         params["dt_bias"][None, None, :])[:, 0]   # (B, H)
+    a = -jnp.exp(params["A_log"])
+
+    xheads = xh.reshape(bs, cfg.ssm_heads, cfg.ssm_head_dim)       # (B,H,P)
+    bh = _broadcast_groups(cfg, b)[:, 0]                           # (B,H,N)
+    ch = _broadcast_groups(cfg, c)[:, 0]
+
+    da = jnp.exp(dt * a[None, :])[..., None, None]                 # (B,H,1,1)
+    upd = (dt[..., None] * xheads.astype(jnp.float32))[..., None] * \
+        bh.astype(jnp.float32)[:, :, None, :]
+    state = cache["state"] * da + upd
+    y = jnp.einsum("bhpn,bhn->bhp", state, ch.astype(jnp.float32))
+    y = y.astype(x.dtype) + params["D"].astype(x.dtype)[None, :, None] * xheads
+
+    y = gated_rmsnorm(params["norm"], y.reshape(bs, 1, cfg.d_inner), z,
+                      cfg.rms_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"].astype(y.dtype))
+    return out, {"conv": new_conv.astype(cache["conv"].dtype), "state": state}

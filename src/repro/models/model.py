@@ -1,0 +1,187 @@
+"""Public Model API: init / forward / loss / prefill / decode_step.
+
+A ``Model`` wraps an ArchConfig with pure functions; params and caches are
+plain pytrees so pjit/shard_map/checkpointing treat them uniformly.
+
+Batch dict conventions (mirrors launch.shapes.input_specs):
+  tokens        (B, S) int32            — always present (labels = shifted)
+  patch_embeds  (B, vision_seq, D)      — VLM stub frontend output
+  frames        (B, encoder_seq, D)     — audio stub frontend output
+
+Modes:
+  forward(mode="train")   logits over the full sequence (+ MoE aux loss)
+  prefill(...)            forward + KV/SSM cache population, last logits
+  decode_step(...)        one token per live sequence against the cache
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import kvcache, transformer
+from repro.models.common import ArchConfig, shard
+from repro.models.layers import (apply_lm_head, embed_tokens, init_embedding,
+                                 init_lm_head)
+
+AUX_LOSS_COEF = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # ---- init ---------------------------------------------------------------
+
+    def init(self, key: jax.Array):
+        cfg = self.cfg
+        params = {
+            "embed": init_embedding(key, cfg),
+            "decoder": transformer.init_stack(key, cfg),
+            "lm_head": init_lm_head(key, cfg),
+        }
+        if cfg.is_encdec:
+            params["encoder"] = transformer.init_encoder(key, cfg)
+        return params
+
+    def init_cache(self, batch_size: int, max_len: int):
+        return kvcache.init_cache(self.cfg, batch_size, max_len)
+
+    # ---- embedding frontends --------------------------------------------------
+
+    def _embed(self, params, batch: Dict[str, jax.Array],
+               positions: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], cfg, batch["tokens"], positions)
+        if cfg.vision_seq and "patch_embeds" in batch:
+            # VLM stub: prepend precomputed patch embeddings.
+            pe = batch["patch_embeds"].astype(cfg.compute_dtype)
+            x = jnp.concatenate([pe, x], axis=1)
+        return x
+
+    def _cross_kv(self, params, enc_out: jax.Array):
+        """Precompute per-decoder-layer cross K/V from encoder output."""
+        cfg = self.cfg
+        plan = cfg.layer_plan()
+        prefix_kv = []
+        for i, spec in enumerate(plan.prefix):
+            if spec.kind != "attn":
+                prefix_kv.append(None)
+                continue
+            k, v = attn.project_cross_kv(
+                params["decoder"]["prefix"][i]["cross"], cfg, enc_out)
+            prefix_kv.append((k, v))
+        stack_kv = None
+        if plan.n_periods:
+            assert len(plan.period) == 1 and plan.period[0].kind == "attn", \
+                "enc-dec cross-KV assumes a single-attn-layer period (whisper)"
+            cross_params = params["decoder"]["stack"][0]["cross"]
+
+            def one(cp):
+                k, v = attn.project_cross_kv(cp, cfg, enc_out)
+                return {"k": k, "v": v}
+
+            stack_kv = jax.vmap(one)(cross_params)
+        return {"prefix": prefix_kv, "stack": stack_kv}
+
+    # ---- forward / loss -------------------------------------------------------
+
+    def forward(self, params, batch: Dict[str, jax.Array],
+                mode: str = "train") -> Tuple[jax.Array, jax.Array]:
+        """Full-sequence logits. Returns (logits (B, S_total, V), aux)."""
+        cfg = self.cfg
+        b, s = batch["tokens"].shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        x = self._embed(params, batch, positions)
+        s_total = x.shape[1]
+        positions_full = jnp.broadcast_to(jnp.arange(s_total), (b, s_total))
+
+        cross_kv = None
+        if cfg.is_encdec:
+            enc_out = transformer.encode(params["encoder"], cfg,
+                                         batch["frames"])
+            cross_kv = self._cross_kv(params, enc_out)
+
+        x, _, aux = transformer.stack_forward(
+            params["decoder"], cfg, x, mode=mode, positions=positions_full,
+            cross_kv=cross_kv)
+        logits = apply_lm_head(params["lm_head"], params["embed"], cfg, x)
+        return logits, aux
+
+    def loss(self, params, batch: Dict[str, jax.Array]
+             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Next-token cross entropy (+ MoE aux). VLM prefix excluded."""
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch, mode="train")
+        tokens = batch["tokens"]
+        if cfg.vision_seq and "patch_embeds" in batch:
+            logits = logits[:, batch["patch_embeds"].shape[1]:]
+        shift_logits = logits[:, :-1]
+        shift_labels = tokens[:, 1:]
+        logp = jax.nn.log_softmax(shift_logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, shift_labels[..., None],
+                                   axis=-1)[..., 0]
+        mask = jnp.ones_like(shift_labels, jnp.float32)
+        if "loss_mask" in batch:
+            mask = batch["loss_mask"][:, 1:].astype(jnp.float32)
+        ce = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        total = ce + AUX_LOSS_COEF * aux
+        return total, {"ce": ce, "aux": aux,
+                       "ppl_proxy": jnp.exp(jnp.minimum(ce, 20.0))}
+
+    # ---- serving --------------------------------------------------------------
+
+    def prefill(self, params, batch: Dict[str, jax.Array], max_len: int
+                ) -> Tuple[jax.Array, Dict[str, object]]:
+        """Populate a fresh cache from the prompt; return last-pos logits."""
+        cfg = self.cfg
+        b, s = batch["tokens"].shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        x = self._embed(params, batch, positions)
+        s_total = x.shape[1]
+        positions_full = jnp.broadcast_to(jnp.arange(s_total), (b, s_total))
+
+        cache = self.init_cache(b, max_len)
+        cross_kv = None
+        if cfg.is_encdec:
+            enc_out = transformer.encode(params["encoder"], cfg,
+                                         batch["frames"])
+            cross_kv = self._cross_kv(params, enc_out)
+            cache["cross_kv"] = cross_kv
+
+        x, cache, _ = transformer.stack_forward(
+            params["decoder"], cfg, x, mode="prefill",
+            positions=positions_full, cache=cache, cross_kv=cross_kv)
+        cache["pos"] = jnp.full((b,), s_total, jnp.int32)
+        if cross_kv is not None:
+            cache["cross_kv"] = cross_kv
+        logits = apply_lm_head(params["lm_head"], params["embed"], cfg,
+                               x[:, -1:])
+        return logits[:, 0], cache
+
+    def decode_step(self, params, cache: Dict[str, object],
+                    tokens: jax.Array
+                    ) -> Tuple[jax.Array, Dict[str, object]]:
+        """One decode step. tokens: (B,) int32 → (logits (B, V), cache)."""
+        cfg = self.cfg
+        pos = cache["pos"]
+        b = tokens.shape[0]
+        x = embed_tokens(params["embed"], cfg, tokens[:, None],
+                         pos[:, None])
+        cross_kv = cache.get("cross_kv")
+        x, cache2, _ = transformer.stack_forward(
+            params["decoder"], cfg, x, mode="decode", cache=cache, pos=pos,
+            cross_kv=cross_kv)
+        cache2["pos"] = pos + 1
+        if cross_kv is not None:
+            cache2["cross_kv"] = cross_kv
+        logits = apply_lm_head(params["lm_head"], params["embed"], cfg, x)
+        return logits[:, 0], cache2
+
+
+def make_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,3 @@
+"""Distribution layer: logical-axis sharding rules, expert-parallel MoE
+(shard_map all-to-all dispatch — the paper's EP baseline), split-KV decode
+collectives, and the AFD two-role runtime (M2N dispatch + 3BO driver)."""

@@ -1,0 +1,328 @@
+"""Attention-FFN Disaggregation (AFD) runtime — the paper's Fig. 1a
+architecture executed on two disjoint device roles.
+
+Role split (node granularity, paper §3.1 assumption):
+  * **A-role** — embeddings, every attention/Mamba mixer, norms, dense
+    MLPs, shared experts, the router, and the LM head. 1-D TP mesh.
+  * **F-role** — the routed-expert weights of every MoE layer, sharded
+    expert-parallel over the F devices.
+
+Per MoE layer and micro-batch the runtime performs the paper's M2N cycle:
+
+    A: attention sublayer + router           (t_a)
+    dispatch: tokens+gating  A-mesh → F-mesh (t_dispatch)  [device_put]
+    F: grouped-GEMM expert FFN               (t_f)
+    combine: routed outputs  F-mesh → A-mesh (t_combine)   [device_put]
+
+``decode_step_3bo`` drives ``n_bo`` micro-batches through the layer loop
+with the rotation schedule of §2.2 — on real hardware JAX's async dispatch
+overlaps the three resources; on CPU the schedule is validated structurally
+and by the byte accounting, while core/overlap.py prices the timing.
+
+The runtime tracks dispatch/combine bytes per micro-batch so the system
+benchmark can check them against Eq. 9's B_rank prediction.
+
+Dense architectures have no routed experts — ``AFDRuntime`` refuses them,
+matching DESIGN.md §Arch-applicability (AFD degenerates to a pipeline
+split; the planner reports it instead).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.kernels import ops as kops
+from repro.models import attention as attn_mod
+from repro.models import kvcache, mamba2, moe as moe_mod
+from repro.models.common import ArchConfig, LayerSpec
+from repro.models.layers import (apply_lm_head, apply_mlp, apply_norm,
+                                 embed_tokens)
+
+
+# ---------------------------------------------------------------------------
+# Parameter surgery: stacked stack → per-layer; split A/F roles
+# ---------------------------------------------------------------------------
+
+def unstack_layer_params(params, cfg: ArchConfig) -> List[Dict]:
+    """Flatten prefix + scanned-stack params into one dict per layer."""
+    plan = cfg.layer_plan()
+    layers: List[Dict] = list(params["decoder"]["prefix"])
+    for p in range(plan.n_periods):
+        for j in range(len(plan.period)):
+            layers.append(jax.tree_util.tree_map(
+                lambda x: x[p], params["decoder"]["stack"][j]))
+    return layers
+
+
+def split_roles(params, cfg: ArchConfig):
+    """Return (a_params, f_expert_params). Experts leave the A side."""
+    layers = unstack_layer_params(params, cfg)
+    a_layers, f_layers = [], []
+    for i, lp in enumerate(layers):
+        lp = dict(lp)
+        f_entry = None
+        if "moe" in lp:
+            moe_p = dict(lp["moe"])
+            f_entry = {"wi": moe_p.pop("wi"), "wo": moe_p.pop("wo")}
+            lp["moe"] = moe_p            # router + shared experts stay on A
+        a_layers.append(lp)
+        f_layers.append(f_entry)
+    a_params = {
+        "embed": params["embed"],
+        "lm_head": params["lm_head"],
+        "final_norm": params["decoder"]["final_norm"],
+        "layers": a_layers,
+    }
+    if "encoder" in params:
+        a_params["encoder"] = params["encoder"]
+    return a_params, f_layers
+
+
+# ---------------------------------------------------------------------------
+# Runtime
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AFDStats:
+    dispatch_bytes: int = 0
+    combine_bytes: int = 0
+    dispatches: int = 0
+
+    def record(self, n_tokens: int, hidden: int, dtype_bytes: int,
+               meta_bytes: int) -> None:
+        self.dispatch_bytes += n_tokens * hidden * dtype_bytes + meta_bytes
+        self.combine_bytes += n_tokens * hidden * dtype_bytes
+        self.dispatches += 1
+
+
+class AFDRuntime:
+    """Two-role decode runtime. Devices are split at node granularity."""
+
+    def __init__(self, cfg: ArchConfig, params, a_devices: Sequence,
+                 f_devices: Sequence, gemm_impl: Optional[str] = None):
+        if not cfg.is_moe:
+            raise ValueError(
+                f"{cfg.name}: AFD requires routed experts "
+                "(DESIGN.md §Arch-applicability)")
+        self.cfg = cfg
+        self.plan = cfg.layer_plan()
+        self.specs = self.plan.flat()
+        self.a_mesh = Mesh(np.array(a_devices), ("model",))
+        self.f_mesh = Mesh(np.array(f_devices), ("expert",))
+        self.gemm_impl = gemm_impl
+        self.stats = AFDStats()
+
+        a_params, f_layers = split_roles(params, cfg)
+        self.a_params = jax.device_put(
+            a_params, NamedSharding(self.a_mesh, P()))
+        ef = len(f_devices)
+        espec = (P("expert", None, None) if cfg.n_experts % ef == 0
+                 else P(None, None, None))   # uneven E: replicate on F
+        self.f_layers = [
+            None if fl is None else {
+                "wi": jax.device_put(fl["wi"],
+                                     NamedSharding(self.f_mesh, espec)),
+                "wo": jax.device_put(fl["wo"],
+                                     NamedSharding(self.f_mesh, espec)),
+            }
+            for fl in f_layers
+        ]
+
+        self._ffn_fn = jax.jit(self._ffn_impl)
+        self._tok_sharding_f = NamedSharding(self.f_mesh, P())
+        self._tok_sharding_a = NamedSharding(self.a_mesh, P())
+
+    # ---- F-role program ----------------------------------------------------
+
+    def _ffn_impl(self, wi, wo, tokens, topw, topi):
+        """Routed-expert FFN given gating (router ran on the A role)."""
+        cfg = self.cfg
+        n, d = tokens.shape
+        sort_idx, inv_idx, group_sizes = moe_mod.sort_by_expert(
+            topi, cfg.n_experts)
+        xs = jnp.take(tokens, sort_idx // cfg.top_k, axis=0)
+        h = kops.grouped_gemm(xs, wi.astype(tokens.dtype), group_sizes,
+                              impl=self.gemm_impl)
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(gate) * up
+        ys = kops.grouped_gemm(h, wo.astype(tokens.dtype), group_sizes,
+                               impl=self.gemm_impl)
+        y = jnp.take(ys, inv_idx, axis=0).reshape(n, cfg.top_k, d)
+        return jnp.einsum("nkd,nk->nd", y, topw.astype(tokens.dtype))
+
+    # ---- per-layer A-role pieces -------------------------------------------
+
+    def _mixer(self, lp, spec: LayerSpec, x, cache, pos):
+        cfg = self.cfg
+        h = apply_norm(lp["ln1"], cfg, x)
+        if spec.kind == "attn":
+            mix, nc = attn_mod.attention_decode(lp["attn"], cfg, h, cache,
+                                                pos)
+        else:
+            mix, nc = mamba2.mamba_decode(lp["mamba"], cfg, h, cache)
+        return x + mix, nc
+
+    def _ffn_local(self, lp, spec: LayerSpec, x):
+        """Dense-MLP layers run wholly on the A role."""
+        cfg = self.cfg
+        if spec.moe or not ("mlp" in lp or cfg.d_ff > 0):
+            return x
+        h = apply_norm(lp["ln2"], cfg, x)
+        return x + apply_mlp(lp["mlp"], cfg, h)
+
+    # ---- the M2N cycle -------------------------------------------------------
+
+    def _moe_cycle(self, lp, f_entry, x):
+        """Norm → route (A) → dispatch → expert FFN (F) → combine (A)."""
+        cfg = self.cfg
+        b = x.shape[0]
+        h = apply_norm(lp["ln2"], cfg, x)
+        tokens = h.reshape(-1, cfg.d_model)
+        _, topw, topi = moe_mod.route(lp["moe"], cfg, tokens)
+
+        # dispatch: M2N transfer A → F
+        tok_f = jax.device_put(tokens, self._tok_sharding_f)
+        topw_f = jax.device_put(topw, self._tok_sharding_f)
+        topi_f = jax.device_put(topi, self._tok_sharding_f)
+        self.stats.record(tokens.shape[0], cfg.d_model,
+                          tokens.dtype.itemsize,
+                          topi.size * 4 + topw.size * 4)
+
+        routed_f = self._ffn_fn(f_entry["wi"], f_entry["wo"], tok_f,
+                                topw_f, topi_f)
+        # combine: N2M transfer F → A
+        routed = jax.device_put(routed_f, self._tok_sharding_a)
+
+        out = x + routed.reshape(x.shape)
+        if "shared" in lp["moe"]:
+            out = out + apply_mlp(lp["moe"]["shared"], cfg, h)
+        return out
+
+    # ---- public decode ---------------------------------------------------------
+
+    def init_cache(self, batch: int, max_len: int):
+        return [kvcache.init_layer_cache(self.cfg, s, batch, max_len)
+                for s in self.specs], jnp.zeros((batch,), jnp.int32)
+
+    def decode_step(self, tokens: jax.Array, caches, pos: jax.Array):
+        """One token for one micro-batch. tokens: (B,)."""
+        cfg = self.cfg
+        x = embed_tokens(self.a_params["embed"], cfg, tokens[:, None],
+                         pos[:, None])
+        new_caches = []
+        for i, spec in enumerate(self.specs):
+            lp = self.a_params["layers"][i]
+            x, nc = self._mixer(lp, spec, x, caches[i], pos)
+            if spec.moe:
+                x = self._moe_cycle(lp, self.f_layers[i], x)
+            else:
+                x = self._ffn_local(lp, spec, x)
+            new_caches.append(nc)
+        x = apply_norm(self.a_params["final_norm"], cfg, x)
+        logits = apply_lm_head(self.a_params["lm_head"],
+                               self.a_params["embed"], cfg, x)
+        return logits[:, 0], new_caches, pos + 1
+
+    def decode_step_3bo(self, micro_batches, n_bo: int = 3):
+        """Drive ``n_bo`` micro-batches through the layer loop in the 3BO
+        rotation: issue order interleaves (layer ℓ, mb m) so that while one
+        micro-batch's experts run on the F role another's attention runs on
+        the A role — JAX async dispatch realises the overlap on hardware.
+
+        micro_batches: list of (tokens (B,), caches, pos). Returns the list
+        of (logits, caches, pos).
+        """
+        cfg = self.cfg
+        states = []
+        for tokens, caches, pos in micro_batches:
+            x = embed_tokens(self.a_params["embed"], cfg, tokens[:, None],
+                             pos[:, None])
+            states.append({"x": x, "caches": caches, "new": [], "pos": pos})
+
+        for i, spec in enumerate(self.specs):
+            lp = self.a_params["layers"][i]
+            # stage 1: attention for every micro-batch (A role busy)
+            for st in states:
+                st["x"], nc = self._mixer(lp, spec, st["x"], st["caches"][i],
+                                          st["pos"])
+                st["new"].append(nc)
+            # stage 2: FFN cycle — dispatches overlap attention of the
+            # next micro-batch under async dispatch
+            for st in states:
+                if spec.moe:
+                    st["x"] = self._moe_cycle(lp, self.f_layers[i], st["x"])
+                else:
+                    st["x"] = self._ffn_local(lp, spec, st["x"])
+
+        outs = []
+        for st in states:
+            x = apply_norm(self.a_params["final_norm"], cfg, st["x"])
+            logits = apply_lm_head(self.a_params["lm_head"],
+                                   self.a_params["embed"], cfg, x)
+            outs.append((logits[:, 0], st["new"], st["pos"] + 1))
+        return outs
+
+
+def split_nodes(devices: Sequence, n_a_nodes: int, n_f_nodes: int,
+                devices_per_node: int = 1):
+    """Split a flat device list into A/F roles at node granularity."""
+    need = (n_a_nodes + n_f_nodes) * devices_per_node
+    if len(devices) < need:
+        raise ValueError(f"need {need} devices, have {len(devices)}")
+    a = devices[:n_a_nodes * devices_per_node]
+    f = devices[n_a_nodes * devices_per_node:need]
+    return list(a), list(f)
+
+
+# ---------------------------------------------------------------------------
+# Elastic scaling (§3.3 discrete rescale as a live operation)
+# ---------------------------------------------------------------------------
+
+def rescale(runtime: AFDRuntime, a_devices: Sequence,
+            f_devices: Sequence) -> AFDRuntime:
+    """Rebuild the runtime on a new role split — the paper's discrete
+    N_A adjustment (Eq. 16) executed live.
+
+    Used by the scheduler after ``planner.elastic_rescale`` picks the
+    floor/ceil fleet under measured imbalance σ, or after a node failure
+    shrinks a role. Parameters are re-placed via device_put (on hardware
+    this is the DCN weight migration the paper's elasticity discussion
+    prices); caches are NOT migrated — in-flight requests drain and
+    re-queue exactly as ``serving.engine.simulate_failure`` does.
+    """
+    # Reassemble the original single-program param pytree from the roles.
+    cfg = runtime.cfg
+    a = jax.device_get(runtime.a_params)
+    f = [None if fl is None else jax.device_get(fl)
+         for fl in runtime.f_layers]
+    layers = []
+    for i, lp in enumerate(a["layers"]):
+        lp = dict(lp)
+        if f[i] is not None:
+            lp["moe"] = {**lp["moe"], **f[i]}
+        layers.append(lp)
+    plan = cfg.layer_plan()
+    prefix = layers[:len(plan.prefix)]
+    stacked = []
+    n_p = plan.n_periods
+    for j in range(len(plan.period)):
+        per = [layers[len(plan.prefix) + p * len(plan.period) + j]
+               for p in range(n_p)]
+        stacked.append(jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *per))
+    params = {
+        "embed": a["embed"],
+        "lm_head": a["lm_head"],
+        "decoder": {"prefix": prefix, "stack": stacked,
+                    "final_norm": a["final_norm"]},
+    }
+    if "encoder" in a:
+        params["encoder"] = a["encoder"]
+    return AFDRuntime(cfg, params, a_devices, f_devices,
+                      gemm_impl=runtime.gemm_impl)

@@ -1,0 +1,248 @@
+"""Logical-axis → mesh sharding rules.
+
+The model substrate annotates activations with logical names
+(``models.common.shard``) and this module decides what they mean on a
+concrete mesh. Parameters get PartitionSpecs from path-based rules.
+
+Parallelism strategy (DESIGN.md §5):
+  * batch  → ("pod", "data")   — DP over pods and the data axis
+  * TP     → "model"           — attention q-heads, FFN hidden, vocab,
+                                 MoE expert dim (EP lives on "model")
+  * FSDP   → "data"            — parameter second-dim sharding for ≥8B
+                                 archs (XLA all-gathers just-in-time)
+  * kv_seq → "model"           — split-KV decode (cache seq dim sharded)
+
+Dims that don't divide evenly by their mesh axes are left replicated
+(conservative; GSPMD padding is avoided so shard_map paths stay exact).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import common as mcommon
+from repro.models.common import ArchConfig
+
+Axes = Tuple[Optional[object], ...]     # one entry per tensor dim
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    """Maps logical axis names to mesh axis names (or tuples thereof)."""
+    batch: object = ("pod", "data")
+    seq: object = None
+    embed: object = None
+    heads: object = "model"
+    kv_heads: object = "model"
+    kv_seq: object = None           # "model" enables split-KV decode layout
+    mlp: object = "model"
+    experts: object = "model"
+    vocab: object = "model"
+    fsdp: object = "data"           # None disables FSDP (small archs)
+    moe_fsdp: object = "data"       # expert-weight FSDP (None = weight-
+                                    # stationary serving, §Perf lever "ws")
+    stack: object = None
+
+    def get(self, name: Optional[str]):
+        if name is None:
+            return None
+        return getattr(self, name)
+
+
+TRAIN_RULES = MeshRules()
+SERVE_RULES = MeshRules(kv_seq="model")
+# Baseline serve rules used for §Perf iteration 0 (no split-KV): cache seq
+# replicated; XLA inserts whatever collectives it derives.
+SERVE_RULES_NO_SPLITKV = MeshRules(kv_seq=None)
+# §Perf H2: sequence-parallel activations — residual-stream activations
+# shard their seq dim over "model" between blocks, turning the Megatron TP
+# activation all-reduces into reduce-scatter/all-gather pairs.
+TRAIN_RULES_SP = MeshRules(seq="model")
+# §Perf H3: weight-stationary serving — expert weights replicated over
+# "data" (they fit per-chip for E/model-shard small models), killing the
+# per-layer FSDP expert-weight all-gathers during prefill.
+SERVE_RULES_WS = MeshRules(kv_seq="model", moe_fsdp=None)
+# §Perf H3 it.2: sequence-parallel prefill activations.
+SERVE_RULES_SP = MeshRules(kv_seq="model", seq="model")
+
+
+def _present_axes(mesh: Mesh, spec_entry) -> Optional[object]:
+    """Filter a rules entry down to axes that exist on this mesh."""
+    if spec_entry is None:
+        return None
+    entries = spec_entry if isinstance(spec_entry, tuple) else (spec_entry,)
+    present = tuple(a for a in entries if a in mesh.axis_names)
+    if not present:
+        return None
+    return present if len(present) > 1 else present[0]
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    entries = entry if isinstance(entry, tuple) else (entry,)
+    return int(np.prod([mesh.shape[a] for a in entries]))
+
+
+def logical_to_spec(mesh: Mesh, rules: MeshRules,
+                    logical: Axes, shape: Sequence[int]) -> P:
+    """Build a PartitionSpec, dropping non-divisible assignments."""
+    out = []
+    used = set()
+    for dim, name in zip(shape, logical):
+        entry = _present_axes(mesh, rules.get(name))
+        if entry is None:
+            out.append(None)
+            continue
+        flat = entry if isinstance(entry, tuple) else (entry,)
+        if any(a in used for a in flat):
+            out.append(None)
+            continue
+        if dim % _axis_size(mesh, entry) != 0:
+            out.append(None)
+            continue
+        used.update(flat)
+        out.append(entry)
+    return P(*out)
+
+
+def install(mesh: Mesh, rules: MeshRules) -> None:
+    """Route ``models.common.shard`` through with_sharding_constraint."""
+
+    def constrain(x, logical: Axes):
+        if x.ndim != len(logical):
+            return x
+        spec = logical_to_spec(mesh, rules, logical, x.shape)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+
+    mcommon.set_constraint_fn(constrain)
+
+
+def uninstall() -> None:
+    mcommon.reset_constraint_fn()
+
+
+class activate:
+    """Context manager: install(mesh, rules) for the duration."""
+
+    def __init__(self, mesh: Mesh, rules: MeshRules):
+        self.mesh, self.rules = mesh, rules
+
+    def __enter__(self):
+        install(self.mesh, self.rules)
+        return self
+
+    def __exit__(self, *exc):
+        uninstall()
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules (path-based)
+# ---------------------------------------------------------------------------
+
+# (regex over the flattened path, logical axes per trailing dims). The
+# leading ``stack`` axis of scanned params is detected by rank mismatch.
+_PARAM_RULES = [
+    (r"embed/tok$",        ("vocab", "embed")),
+    (r"embed/pos$",        (None, "embed")),
+    (r"enc\.pos|encoder/pos$", (None, "embed")),
+    (r"lm_head/w$",        ("fsdp", "vocab")),
+    (r"attn/wq$|cross/wq$", ("fsdp", "heads")),
+    (r"attn/wk$|cross/wk$", ("fsdp", "kv_heads")),
+    (r"attn/wv$|cross/wv$", ("fsdp", "kv_heads")),
+    (r"attn/wo$|cross/wo$", ("heads", "fsdp")),
+    (r"attn/b[qkv]$|cross/b[qkv]$", (None,)),
+    (r"mlp/wi$|shared/wi$", ("fsdp", "mlp")),
+    (r"mlp/wo$|shared/wo$", ("mlp", "fsdp")),
+    (r"mlp/b[io]$|shared/b[io]$", (None,)),
+    (r"moe/router$",       (None, None)),
+    (r"moe/wi$",           ("experts", "moe_fsdp", None)),
+    (r"moe/wo$",           ("experts", None, "moe_fsdp")),
+    (r"mamba/in_proj$",    ("fsdp", None)),
+    (r"mamba/out_proj$",   (None, "fsdp")),
+    (r"mamba/conv_w$",     (None, None)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_spec(path, leaf, mesh: Mesh, rules: MeshRules) -> P:
+    s = _path_str(path)
+    for pat, logical in _PARAM_RULES:
+        if re.search(pat, s):
+            ndim = leaf.ndim
+            logical = tuple(logical)
+            if ndim == len(logical) + 1:
+                logical = ("stack",) + logical        # scanned stack axis
+            elif ndim != len(logical):
+                return P()
+            return logical_to_spec(mesh, rules, logical, leaf.shape)
+    # norms, scalars, A_log, dt_bias, ... → replicated
+    return P()
+
+
+def params_shardings(params, mesh: Mesh, rules: MeshRules):
+    """NamedSharding pytree matching ``params``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_spec(path, leaf, mesh,
+                                                          rules)),
+        params)
+
+
+def batch_shardings(batch, mesh: Mesh, rules: MeshRules):
+    """Input batches shard on the leading (batch) dim only."""
+
+    def spec(leaf):
+        logical = ("batch",) + (None,) * (leaf.ndim - 1)
+        return NamedSharding(mesh, logical_to_spec(mesh, rules, logical,
+                                                   leaf.shape))
+
+    return jax.tree_util.tree_map(spec, batch)
+
+
+def cache_shardings(cache, mesh: Mesh, rules: MeshRules, cfg: ArchConfig):
+    """KV/SSM cache shardings: batch on dim0 (dim1 under stack), kv_seq
+    per SERVE rules on the cache sequence dim."""
+
+    def spec_for(path, leaf):
+        s = _path_str(path)
+        ndim = leaf.ndim
+        if s.endswith("pos"):
+            return P()
+        stacked = "stack" in s
+        if re.search(r"/k$|/v$", s):
+            logical = ("batch", "kv_seq", "kv_heads", None)
+        elif s.endswith("conv"):
+            logical = ("batch", None, None)
+        elif s.endswith("state"):
+            logical = ("batch", "heads", None, None)
+        else:
+            logical = ("batch",) + (None,) * (ndim - 1)
+        if stacked and ndim == len(logical) + 1:
+            logical = ("stack",) + logical
+        if ndim != len(logical):
+            logical = tuple(list(logical)[:ndim]) if ndim < len(logical) \
+                else logical + (None,) * (ndim - len(logical))
+        return logical_to_spec(mesh, rules, logical, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, spec_for(path, leaf)), cache)

@@ -1,0 +1,3 @@
+"""Serving runtime: continuous-batching decode engine, the SLO/imbalance
+scheduler implementing §3.3's mitigation policies, and the MTP speculative
+harness that supplies L_accept for the budget model (Eq. 1)."""

@@ -1,0 +1,3 @@
+"""Training substrate: optimizers (AdamW, Adafactor), the train-step
+builder (grad accumulation, remat, bf16 all-reduce), sharded checkpointing
+with async writes and restart, and the synthetic data pipeline."""

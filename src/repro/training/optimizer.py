@@ -1,0 +1,162 @@
+"""Optimizers as pure pytree transforms (no external deps).
+
+  * AdamW     — the default for ≤10B-parameter architectures.
+  * Adafactor — factored second moments, no first moment: the optimizer
+    state for a (K, N) matrix is K + N floats instead of 2·K·N, which is
+    what makes the 1T-parameter Kimi-K2 train_4k cell fit the multi-pod
+    memory budget (DESIGN.md §5).
+
+API: ``opt = adamw(lr=...)``; ``state = opt.init(params)``;
+``params, state = opt.update(grads, state, params)``. States are pytrees;
+they inherit the parameter shardings leaf-for-leaf.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable                  # (grads, state, params) -> (params, state)
+    name: str = "opt"
+
+
+def _cast_like(x, ref):
+    return x.astype(ref.dtype) if hasattr(ref, "dtype") else x
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(lr: float = 1e-3, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          grad_clip: Optional[float] = 1.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "mu": jax.tree_util.tree_map(zeros, params),
+            "nu": jax.tree_util.tree_map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        if grad_clip is not None:
+            grads = clip_by_global_norm(grads, grad_clip)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state["mu"], grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(
+                g.astype(jnp.float32)),
+            state["nu"], grads)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v):
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+        return new_params, {"mu": mu, "nu": nu, "step": step}
+
+    return Optimizer(init=init, update=update, name="adamw")
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored; no momentum)
+# ---------------------------------------------------------------------------
+
+def adafactor(lr: float = 1e-3, eps: float = 1e-30,
+              decay: float = 0.8, clip_threshold: float = 1.0,
+              weight_decay: float = 0.0) -> Optimizer:
+    """Shazeer–Stern Adafactor with factored second moments for ≥2-D
+    params (trailing two dims factored) and full accumulators for vectors."""
+
+    def _is_factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def state_for(p):
+            if _is_factored(p):
+                row_shape = p.shape[:-1]
+                col_shape = p.shape[:-2] + p.shape[-1:]
+                return {"vr": jnp.zeros(row_shape, jnp.float32),
+                        "vc": jnp.zeros(col_shape, jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "acc": jax.tree_util.tree_map(state_for, params,
+                                          is_leaf=lambda x: hasattr(x, "ndim")),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def upd(p, g, acc):
+            gf = g.astype(jnp.float32)
+            g2 = jnp.square(gf) + eps
+            if _is_factored(p):
+                vr = beta * acc["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * acc["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                r = vr / jnp.maximum(
+                    jnp.mean(vr, axis=-1, keepdims=True), eps)
+                u = gf / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :]
+                          / jnp.sqrt(jnp.maximum(
+                              jnp.mean(vc, axis=-1, keepdims=True),
+                              eps))[..., None, :] + eps)
+                # simpler canonical form: u = g / sqrt(vr⊗vc / mean(vr))
+                new_acc = {"vr": vr, "vc": vc}
+            else:
+                v = beta * acc["v"] + (1 - beta) * g2
+                u = gf / (jnp.sqrt(v) + eps)
+                new_acc = {"v": v}
+            # update clipping (RMS ≤ clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_acc
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_a = treedef.flatten_up_to(state["acc"])
+        outs = [upd(p, g, a) for p, g, a in zip(flat_p, flat_g, flat_a)]
+        new_params = treedef.unflatten([o[0] for o in outs])
+        new_acc = treedef.unflatten([o[1] for o in outs])
+        return new_params, {"acc": new_acc, "step": step}
+
+    return Optimizer(init=init, update=update, name="adafactor")
+
+
+# ---------------------------------------------------------------------------
+# Utilities
+# ---------------------------------------------------------------------------
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads)
+
+
+def optimizer_for(arch_params_b: float) -> Optimizer:
+    """Policy: Adafactor for ≥100B-parameter models, AdamW otherwise."""
+    return adafactor() if arch_params_b >= 100.0 else adamw()

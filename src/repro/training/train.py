@@ -1,0 +1,154 @@
+"""Train-step builder: grad accumulation, remat, distributed shardings.
+
+``build_step_fn`` assembles the raw (params, opt_state, batch) →
+(params, opt_state, metrics) function with optional microbatch gradient
+accumulation (lax.scan over microbatch slices, so the per-microbatch graph
+appears once in HLO). ``make_train_step`` jits it for single-host use;
+``jit_distributed_train_step`` jits with explicit pjit shardings derived
+from the logical-axis rules — ShapeDtypeStruct-compatible, which is what
+the multi-pod dry-run lowers.
+
+Distributed-optimization details (DESIGN.md §5):
+  * grads are accumulated in f32 but *communicated* in the param dtype
+    (bf16 all-reduce → half the DP reduction bytes),
+  * optimizer state shardings mirror parameter shardings (AdamW) or drop
+    the factored dim (Adafactor vr/vc), so no optimizer leaf is ever
+    replicated-large,
+  * remat is a per-period jax.checkpoint inside the model stack
+    (cfg.remat), priced separately in the §Perf iteration log.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.model import Model
+from repro.parallel import sharding as shd
+from repro.training.optimizer import Optimizer, global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    grad_accum: int = 1
+    bf16_grad_reduce: bool = True
+
+
+_ZERO_METRICS = lambda: {"ce": jnp.zeros((), jnp.float32),
+                         "aux": jnp.zeros((), jnp.float32),
+                         "ppl_proxy": jnp.zeros((), jnp.float32)}
+
+
+def _microbatches(batch: Dict[str, jax.Array], n: int):
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, f"batch {b} not divisible by grad_accum {n}"
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree_util.tree_map(split, batch)
+
+
+def build_step_fn(model: Model, opt: Optimizer,
+                  tc: TrainConfig = TrainConfig()):
+    grad_fn = jax.value_and_grad(lambda p, b: model.loss(p, b),
+                                 has_aux=True)
+
+    def step(params, opt_state, batch):
+        if tc.grad_accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            mbs = _microbatches(batch, tc.grad_accum)
+
+            def body(acc, mb):
+                (l, m), g = grad_fn(params, mb)
+                if tc.bf16_grad_reduce:
+                    # communicate in param dtype; accumulate in f32
+                    g = jax.tree_util.tree_map(
+                        lambda a, p: a.astype(p.dtype), g, params)
+                acc = jax.tree_util.tree_map(
+                    lambda a, b_: a + b_.astype(a.dtype), acc, g)
+                return acc, (l, m)
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            gsum, (ls, ms) = jax.lax.scan(body, zeros, mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / tc.grad_accum, gsum)
+            loss = jnp.mean(ls)
+            metrics = jax.tree_util.tree_map(lambda x: jnp.mean(x), ms)
+
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["grad_norm"] = global_norm(grads)
+        return new_params, new_opt, metrics
+
+    return step
+
+
+def make_train_step(model: Model, opt: Optimizer,
+                    tc: TrainConfig = TrainConfig(), donate: bool = True):
+    return jax.jit(build_step_fn(model, opt, tc),
+                   donate_argnums=(0, 1) if donate else ())
+
+
+# ---------------------------------------------------------------------------
+# Distributed shardings
+# ---------------------------------------------------------------------------
+
+def opt_state_shardings(opt_state_shape, p_shard, mesh: Mesh):
+    """Optimizer-state shardings derived from parameter shardings.
+
+    AdamW: mu/nu mirror params leaf-for-leaf. Adafactor: vr drops the last
+    param dim, vc drops the second-to-last (factored stats stay sharded on
+    the surviving axes).
+    """
+    repl = NamedSharding(mesh, P())
+    if "mu" in opt_state_shape:                       # AdamW
+        return {"mu": p_shard, "nu": p_shard, "step": repl}
+
+    # Adafactor: align acc leaves (dicts) with param shardings by order.
+    is_acc_leaf = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+    acc_shape = opt_state_shape["acc"]
+    flat_acc, treedef = jax.tree_util.tree_flatten(acc_shape,
+                                                   is_leaf=is_acc_leaf)
+    flat_ps = jax.tree_util.tree_leaves(p_shard)
+    assert len(flat_acc) == len(flat_ps), (len(flat_acc), len(flat_ps))
+
+    def shard_acc(acc_leaf, ps):
+        spec = tuple(ps.spec) if ps.spec else ()
+        if "v" in acc_leaf:
+            return {"v": NamedSharding(
+                mesh, P(*spec) if len(spec) == acc_leaf["v"].ndim else P())}
+        nd = acc_leaf["vr"].ndim + 1                  # param ndim
+        if len(spec) != nd:
+            spec = (None,) * nd
+        return {"vr": NamedSharding(mesh, P(*spec[:-1])),
+                "vc": NamedSharding(mesh, P(*(spec[:-2] + spec[-1:])))}
+
+    acc_shard = jax.tree_util.tree_unflatten(
+        treedef, [shard_acc(a, s) for a, s in zip(flat_acc, flat_ps)])
+    return {"acc": acc_shard, "step": repl}
+
+
+def jit_distributed_train_step(model: Model, opt: Optimizer, params_shape,
+                               opt_shape, batch_shape, mesh: Mesh,
+                               tc: TrainConfig = TrainConfig(),
+                               rules: Optional[shd.MeshRules] = None,
+                               donate: bool = True):
+    """pjit'd train step with explicit shardings (dry-run compatible).
+
+    Returns (jitted_fn, (params_shardings, opt_shardings, batch_shardings)).
+    """
+    rules = rules or shd.TRAIN_RULES
+    step = build_step_fn(model, opt, tc)
+    p_shard = shd.params_shardings(params_shape, mesh, rules)
+    o_shard = opt_state_shardings(opt_shape, p_shard, mesh)
+    b_shard = shd.batch_shardings(batch_shape, mesh, rules)
+    jitted = jax.jit(step,
+                     in_shardings=(p_shard, o_shard, b_shard),
+                     out_shardings=(p_shard, o_shard, None),
+                     donate_argnums=(0, 1) if donate else ())
+    return jitted, (p_shard, o_shard, b_shard)

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Tests must see ONE device (the dry-run alone forces 512) — never set
+# xla_force_host_platform_device_count here (task brief).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_default_matmul_precision", "highest")

@@ -1,0 +1,71 @@
+"""Budget model (Eqs. 1–8) — unit + property tests."""
+
+import math
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import budget as bdg
+from repro.core.hardware import get_hardware
+from repro.core.modelspec import get_model
+
+
+def test_stage_budget_dsv3_matches_paper_setup():
+    # T = 0.05 × 1.7 = 85 ms; minus t_g 15 ms → 70 ms over 58·3 stages.
+    m = get_model("DeepSeek-V3")
+    t_b = bdg.stage_budget(m, bdg.Scenario())
+    assert t_b == pytest.approx((0.05 * 1.7 - 0.015) / (58 * 3))
+
+
+def test_stage_budget_dense_uses_all_layers():
+    m = get_model("qwen3-8b")
+    t_b = bdg.stage_budget(m, bdg.Scenario())
+    assert t_b == pytest.approx((0.05 * 1.7 - 0.015) / (36 * 3))
+
+
+def test_gap_exceeding_T_raises():
+    m = get_model("DeepSeek-V3")
+    with pytest.raises(ValueError):
+        bdg.stage_budget(m, bdg.Scenario(slo_tpot=0.005, l_accept=1.0,
+                                         t_gap=0.1))
+
+
+def test_grouped_gemm_flops_and_bytes():
+    # 6·G·B·H·M and 3·G·H·M (paper §3.2)
+    assert bdg.grouped_gemm_flops(4, 16, 128, 64) == 6 * 4 * 16 * 128 * 64
+    assert bdg.grouped_gemm_bytes(4, 128, 64) == 3 * 4 * 128 * 64
+
+
+def test_hfu_equals_ofu_times_st():
+    hw = get_hardware("H800")
+    m = bdg.StageMetrics(flops=1e12, t_gemm=2e-4, t_budget=4e-4,
+                        peak_flops=hw.peak_flops)
+    assert m.hfu == pytest.approx(m.ofu * m.temporal_sparsity)
+
+
+@given(flops=st.floats(1e9, 1e15), t_gemm=st.floats(1e-6, 1e-2))
+def test_ofu_st_hfu_consistency(flops, t_gemm):
+    t_budget = t_gemm * 2.0
+    m = bdg.StageMetrics(flops=flops, t_gemm=t_gemm, t_budget=t_budget,
+                        peak_flops=1.979e15)
+    assert m.temporal_sparsity == pytest.approx(0.5)
+    assert m.hfu == pytest.approx(m.ofu * 0.5, rel=1e-9)
+
+
+@given(tokens=st.floats(1, 1e5), g=st.integers(1, 64))
+def test_roofline_time_monotone_in_tokens(tokens, g):
+    hw = get_hardware("H800")
+    model = get_model("DeepSeek-V3")
+    f1 = bdg.grouped_gemm_flops(g, tokens, model.hidden_size,
+                                model.moe_intermediate)
+    f2 = bdg.grouped_gemm_flops(g, tokens * 2, model.hidden_size,
+                                model.moe_intermediate)
+    mem = bdg.grouped_gemm_bytes(g, model.hidden_size,
+                                 model.moe_intermediate)
+    assert bdg.gemm_time_roofline(f2, mem, hw) >= \
+        bdg.gemm_time_roofline(f1, mem, hw)
+
+
+def test_wire_bytes_constant_matches_eq17():
+    # fp8 dispatch + bf16 combine = 3 bytes per hidden element
+    assert bdg.WIRE_BYTES_PER_ELEM == 3

@@ -1,0 +1,100 @@
+"""Communication-extended roofline (Eqs. 9–10, Fig. 2) — validation
+targets #1 and #2 from DESIGN.md §7."""
+
+import math
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import comm_roofline as cr
+from repro.core.budget import Scenario, stage_budget
+from repro.core.hardware import get_hardware
+from repro.core.modelspec import get_model
+
+DSV3 = get_model("DeepSeek-V3")
+H800 = get_hardware("H800")
+
+
+def test_dsv3_h800_nf2_is_scale_up_bound():
+    # Paper §3.1: TopK/N_F = 8/2 = 4 > 160/50 = 3.2 ⇒ scale-up bound,
+    # B_rank = B_ScaleUp = 3.2 × B_ScaleOut.
+    assert H800.scale_up_over_out == pytest.approx(3.2)
+    assert cr.fanout_factor(DSV3.top_k, 2) == 4.0
+    assert cr.regime(DSV3, H800, 2) == cr.REGIME_SCALE_UP_BOUND
+    t_b = stage_budget(DSV3, Scenario())
+    b_up = cr.tokens_over_link(H800.scale_up_bw, t_b, DSV3.hidden_size)
+    b_out = cr.tokens_over_link(H800.scale_out_bw, t_b, DSV3.hidden_size)
+    assert cr.b_rank(DSV3, H800, t_b, 2) == pytest.approx(b_up)
+    assert b_up == pytest.approx(3.2 * b_out)
+
+
+def test_regime_boundaries_dsv3_h800():
+    b = cr.regime_boundaries(DSV3, H800)
+    assert b["scale_up_bound_max_nf"] == 2
+    assert b["scale_out_bound_min_nf"] == 8       # N_F ≥ TopK
+    assert b["max_intensity_min_nf"] == 32        # 256 experts / 8 per node
+
+
+def test_regimes_partition_the_sweep():
+    pts = cr.intensity_sweep(DSV3, H800, n_f_max=64)
+    regimes = [p.regime for p in pts]
+    # scale-up-bound → stable → scale-out-bound → max-intensity, in order
+    order = {cr.REGIME_SCALE_UP_BOUND: 0, cr.REGIME_STABLE: 1,
+             cr.REGIME_SCALE_OUT_BOUND: 2, cr.REGIME_MAX_INTENSITY: 3}
+    ranks = [order[r] for r in regimes]
+    assert ranks == sorted(ranks)
+    assert regimes[0] == cr.REGIME_SCALE_UP_BOUND
+    assert regimes[-1] == cr.REGIME_MAX_INTENSITY
+
+
+def test_b_rank_flat_beyond_topk():
+    # §3.1: from N_F ≥ TopK, B_rank stops increasing (FLOPs capped).
+    t_b = stage_budget(DSV3, Scenario())
+    b8 = cr.b_rank(DSV3, H800, t_b, 8)
+    for n_f in (9, 16, 32, 64):
+        assert cr.b_rank(DSV3, H800, t_b, n_f) == pytest.approx(b8)
+
+
+def test_intensity_flat_in_stable_region():
+    t_b = stage_budget(DSV3, Scenario())
+    i4 = cr.arithmetic_intensity(DSV3, H800, t_b, 4, discretize=False)
+    i8 = cr.arithmetic_intensity(DSV3, H800, t_b, 8, discretize=False)
+    assert i4 == pytest.approx(i8, rel=1e-9)
+
+
+def test_discretized_never_exceeds_continuous():
+    t_b = stage_budget(DSV3, Scenario())
+    for n_f in range(1, 65):
+        d = cr.arithmetic_intensity(DSV3, H800, t_b, n_f, True)
+        c = cr.arithmetic_intensity(DSV3, H800, t_b, n_f, False)
+        assert d <= c * (1 + 1e-12)
+
+
+def test_superpod_ignores_scale_out():
+    gb200 = get_hardware("GB200")
+    t_b = stage_budget(DSV3, Scenario())
+    b_up = cr.tokens_over_link(gb200.scale_up_bw, t_b, DSV3.hidden_size)
+    for n_f in (1, 4, 32):
+        assert cr.b_rank(DSV3, gb200, t_b, n_f) == pytest.approx(b_up)
+
+
+@given(n_f=st.integers(1, 128))
+def test_b_rank_monotone_nonincreasing_in_nf(n_f):
+    # Eq. 9: the two-stage-forwarding fan-out max(1, TopK/N_F) shrinks with
+    # N_F, so per-rank inflow can only fall (Fig. 2's B_rank staircase).
+    t_b = stage_budget(DSV3, Scenario())
+    b1 = cr.b_rank(DSV3, H800, t_b, n_f)
+    b2 = cr.b_rank(DSV3, H800, t_b, n_f + 1)
+    assert b2 <= b1 * (1 + 1e-12)
+
+
+@given(n_f=st.integers(1, 128), scale=st.floats(1.1, 10.0))
+def test_intensity_scales_with_bandwidth(n_f, scale):
+    import dataclasses
+    t_b = stage_budget(DSV3, Scenario())
+    hw2 = dataclasses.replace(
+        H800, scale_out_bw=H800.scale_out_bw * scale,
+        scale_up_bw=H800.scale_up_bw * scale)
+    i1 = cr.arithmetic_intensity(DSV3, H800, t_b, n_f)
+    i2 = cr.arithmetic_intensity(DSV3, hw2, t_b, n_f)
+    assert i2 == pytest.approx(i1 * scale, rel=1e-9)

@@ -1,0 +1,81 @@
+"""HFU upper bounds (Fig. 4, Appendix A) — validation targets #3 and #4."""
+
+import pytest
+
+from repro.core import hfu_bound as hb
+from repro.core.budget import Scenario
+from repro.core.hardware import get_hardware
+from repro.core.modelspec import PAPER_MODELS, get_model
+
+DSV3 = get_model("DeepSeek-V3")
+
+
+def test_h800_dead_zone_ceiling_33_percent():
+    # Paper §3.2: "the theoretical HFU upper limit of AFD on non-Superpod
+    # H800 platform is only 33.1%".
+    best = hb.hfu_ceiling(DSV3, get_hardware("H800"), feasible_only=False)
+    assert best.hfu == pytest.approx(0.331, abs=0.005)
+    assert best.hfu < hb.LARGE_EP_REFERENCE_HFU
+
+
+def test_gb200_closed_form_65_5_percent():
+    gb200 = get_hardware("GB200")
+    assert hb.superpod_hfu_closed_form(DSV3, gb200) == \
+        pytest.approx(0.65536, abs=1e-6)
+    # Kimi-K2 shares M=2048 ⇒ identical HFU (the Appendix-A observation)
+    kimi = get_model("Kimi-K2")
+    assert hb.superpod_hfu_closed_form(kimi, gb200) == \
+        pytest.approx(hb.superpod_hfu_closed_form(DSV3, gb200))
+
+
+def test_glm_lower_due_to_small_m():
+    gb200 = get_hardware("GB200")
+    glm = get_model("GLM-4.7")
+    assert hb.superpod_hfu_closed_form(glm, gb200) == \
+        pytest.approx(0.49152, abs=1e-6)
+
+
+def test_sweep_converges_to_closed_form_on_superpod():
+    gb200 = get_hardware("GB200")
+    for name, model in PAPER_MODELS.items():
+        closed = hb.superpod_hfu_closed_form(model, gb200)
+        swept = hb.hfu_ceiling(model, gb200, Scenario(),
+                               feasible_only=False).hfu
+        assert swept == pytest.approx(closed, abs=0.02), name
+
+
+def test_dead_zone_exists_on_h800():
+    zone = hb.dead_zone(DSV3, get_hardware("H800"))
+    assert zone, "expected a dead zone on H800"
+    assert min(zone) >= DSV3.top_k          # past the scale-out knee
+
+
+def test_hfu_bounded_by_one_and_st():
+    for hw_name in ("H20", "H800", "GB200"):
+        hw = get_hardware(hw_name)
+        for p in hb.hfu_sweep(DSV3, hw):
+            assert 0.0 <= p.hfu <= 1.0 + 1e-9
+            assert p.hfu <= p.ofu + 1e-9
+            assert 0.0 <= p.temporal_sparsity <= 1.0 + 1e-9
+
+
+def test_memory_feasibility_flags_small_nf():
+    # DSv3 experts (~671B fp8) cannot fit a single 8-GPU H800 node.
+    h800 = get_hardware("H800")
+    assert not hb.memory_feasible(DSV3, h800, 1)
+    assert hb.memory_feasible(DSV3, h800, 64)
+
+
+def test_coarse_low_sparsity_models_rank_higher_on_superpod():
+    # §4: Step3 (M=5120, sparsity 16) ≥ DSv3 (M=2048, sparsity 32).
+    gb200 = get_hardware("GB200")
+    step3 = hb.hfu_ceiling(get_model("Step3"), gb200, feasible_only=False)
+    dsv3 = hb.hfu_ceiling(DSV3, gb200, feasible_only=False)
+    assert step3.hfu >= dsv3.hfu
+
+
+def test_h20_beats_h800_in_theoretical_hfu():
+    # Fig. 4: weak-FLOPS platforms reach higher HFU at modest tokens.
+    h20 = hb.hfu_ceiling(DSV3, get_hardware("H20"), feasible_only=False)
+    h800 = hb.hfu_ceiling(DSV3, get_hardware("H800"), feasible_only=False)
+    assert h20.hfu > h800.hfu

@@ -1,0 +1,79 @@
+"""HLO collective parser + roofline term derivation."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import hlo_analysis as hlo
+
+SAMPLE = """
+  %all-reduce = f32[32,64]{1,0} all-reduce(%dot.1), channel_id=1, replica_groups=[4,2]<=[2,4]T(1,0), use_global_device_ids=true, to_apply=%add
+  %ag = bf16[16,128]{1,0} all-gather(%p0), channel_id=2, replica_groups=[2,4]<=[8], dimensions={0}
+  %rs = f32[8,8]{1,0} reduce-scatter(%x), channel_id=3, replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  %a2a = bf16[64]{0} all-to-all(%y), channel_id=4, replica_groups=[1,8]<=[8]
+  %cp = u32[128]{0} collective-permute(%z), channel_id=5, source_target_pairs={{0,1}}
+  %ard = f32[4]{0} all-reduce-done(%start)
+  %other = f32[2,2]{1,0} add(%a, %b)
+"""
+
+
+def test_parser_counts_and_bytes():
+    s = hlo.collective_bytes(SAMPLE)
+    assert s.counts["all-reduce"] == 1          # -done skipped
+    assert s.counts["all-gather"] == 1
+    assert s.counts["reduce-scatter"] == 1
+    assert s.counts["all-to-all"] == 1
+    assert s.counts["collective-permute"] == 1
+    r_ar = 32 * 64 * 4
+    assert s.operand_bytes["all-reduce"] == r_ar
+    assert s.link_bytes["all-reduce"] == int(2 * r_ar * (2 - 1) / 2)
+    r_ag = 16 * 128 * 2
+    assert s.operand_bytes["all-gather"] == r_ag // 4
+    r_rs = 8 * 8 * 4
+    assert s.operand_bytes["reduce-scatter"] == r_rs * 4
+    assert s.operand_bytes["collective-permute"] == 128 * 4
+
+
+def test_group_size_formats():
+    assert hlo._group_size("replica_groups=[4,2]<=[2,4]T(1,0)") == 2
+    assert hlo._group_size("replica_groups={{0,1,2,3},{4,5}}") == 4
+    assert hlo._group_size("no groups here") == 1
+
+
+def test_shape_bytes():
+    assert hlo.shape_bytes("f32", "4,4") == 64
+    assert hlo.shape_bytes("bf16", "8") == 16
+    assert hlo.shape_bytes("pred", "") == 1
+    assert hlo.shape_bytes("unknown", "4") == 0
+
+
+def test_roofline_terms_and_dominance():
+    coll = hlo.collective_bytes(SAMPLE)
+    t = hlo.roofline({"flops": 1e12, "bytes accessed": 1e9}, coll, 256)
+    assert t.t_compute == pytest.approx(1e12 / 197e12)
+    assert t.t_memory == pytest.approx(1e9 / 819e9)
+    assert t.dominant in ("compute", "memory", "collective")
+    assert 0 <= t.compute_fraction <= 1.0
+    assert hlo.improvement_hint(t)
+
+
+def test_parser_on_real_compiled_module():
+    """End-to-end: a sharded matmul's backward must show all-reduce."""
+    mesh = jax.make_mesh((1,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def f(w, x):
+        return jnp.sum((x @ w) ** 2)
+
+    gf = jax.jit(jax.grad(f))
+    lo = gf.lower(jax.ShapeDtypeStruct((64, 128), jnp.float32),
+                  jax.ShapeDtypeStruct((32, 64), jnp.float32))
+    co = lo.compile()
+    s = hlo.collective_bytes(co.as_text())     # 1 device → none expected
+    assert sum(s.counts.values()) == 0
+
+
+def test_model_flops():
+    assert hlo.model_flops(1e9, 100, train=True) == 6e11
+    assert hlo.model_flops(1e9, 100, train=False) == 2e11

@@ -1,0 +1,88 @@
+"""Imbalance penalties (Eqs. 11–16, Figs. 5–6) — validation target #5."""
+
+import math
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import imbalance as imb
+
+sigmas = st.floats(0.05, 1.0)
+lams = st.floats(0.1, 10.0)
+
+
+def test_alpha_ep_closed_form():
+    assert imb.alpha_ep(0.8, 4.0) == pytest.approx((4 + 1) / (4 + 1 / 0.8))
+
+
+@given(sigma=sigmas, lam=lams)
+def test_alpha_ep_bounds(sigma, lam):
+    a = imb.alpha_ep(sigma, lam)
+    assert sigma - 1e-12 <= a <= 1.0 + 1e-12
+
+
+@given(sigma=st.floats(0.05, 0.999), lam=lams)
+def test_alpha_ep_strictly_above_sigma(sigma, lam):
+    assert imb.alpha_ep(sigma, lam) > sigma
+
+
+@given(sigma=st.floats(0.05, 0.999), lam=lams)
+def test_alpha_ep_monotone_in_lambda(sigma, lam):
+    assert imb.alpha_ep(sigma, lam * 1.5) >= imb.alpha_ep(sigma, lam)
+
+
+def test_afd_exact_equals_ep_formula_with_node_ratio():
+    # Eq. 13 ≡ Eq. 12 with λ_AFD = N_A/N_F
+    sigma, n_a, n_f = 0.75, 12, 4
+    assert imb.alpha_afd_exact(sigma, n_a, n_f) == \
+        pytest.approx(imb.alpha_ep(sigma, n_a / n_f))
+
+
+@given(sigma=sigmas, n_a=st.integers(1, 64), n_f=st.integers(1, 16))
+def test_alpha_afd_reduces_to_exact_on_integers(sigma, n_a, n_f):
+    x = sigma * n_a
+    if abs(x - round(x)) < 1e-9 and round(x) >= 1:
+        assert imb.alpha_afd(sigma, n_a, n_f) == \
+            pytest.approx(imb.alpha_afd_exact(sigma, n_a, n_f))
+
+
+@given(sigma=sigmas, n_a=st.integers(1, 64), n_f=st.integers(1, 16))
+def test_alpha_afd_bounded(sigma, n_a, n_f):
+    a = imb.alpha_afd(sigma, n_a, n_f)
+    assert 0.0 <= a <= 1.0 + 1e-9
+
+
+@given(sigma=st.floats(0.3, 0.999), n_a=st.integers(2, 64),
+       n_f=st.integers(1, 16))
+def test_discrete_afd_never_beats_its_continuous_envelope(sigma, n_a, n_f):
+    # floor/ceil quantization can only lose vs the exact-σ·N_A point
+    cont = imb.alpha_afd_exact(sigma, n_a, n_f)
+    disc = imb.alpha_afd(sigma, n_a, n_f)
+    assert disc <= cont + 1e-9
+
+
+def test_afd_worse_than_ep_in_most_cases():
+    # Paper Fig. 6: "worse than large-scale EP in most cases"
+    frac = imb.afd_worse_fraction()
+    assert frac > 0.7
+
+
+def test_sigma_08_lambda5_near_parity():
+    # §3.3.2: "only when σ exactly equals 0.8 can it barely achieve a
+    # consistent imbalance penalty" (λ = 5)
+    for n_f in (2, 4, 6):
+        a_ep = imb.alpha_ep(0.8, 5.0)
+        a_afd = imb.alpha_afd(0.8, 5 * n_f, n_f)
+        assert a_afd == pytest.approx(a_ep, abs=5e-3)
+
+
+def test_dp_imbalance_afd_stuck_at_sigma():
+    for s in (0.6, 0.75, 0.9):
+        assert imb.alpha_dp_afd(s) == s
+        assert imb.alpha_dp_ep(s, lam=4.0) > s
+
+
+def test_invalid_sigma_raises():
+    for bad in (0.0, -0.5, 1.5):
+        with pytest.raises(ValueError):
+            imb.alpha_ep(bad, 4.0)

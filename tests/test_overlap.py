@@ -1,0 +1,89 @@
+"""Overlap pipeline simulator (Table 2, Fig. 1b) — validation target #6."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import overlap as ov
+
+TIGHT = ov.StageTimes(t_attn=1.0, t_ffn=1.0, t_dispatch=0.4, t_combine=0.4,
+                      t_shared=0.3)
+
+
+def test_3bo_bubble_free_when_balanced():
+    a, f = ov.steady_state_utilization("3BO", TIGHT, n_layers=48)
+    assert a == pytest.approx(1.0, abs=0.02)
+    assert f == pytest.approx(1.0, abs=0.02)
+
+
+def test_2bo_afd_has_bubbles_iff_condition():
+    # t_d + t_f + t_c > t_a → bubbles (paper §2.2)
+    assert ov.afd_2bo_has_bubbles(TIGHT)
+    a, _ = ov.steady_state_utilization("2BO", TIGHT, n_layers=48,
+                                       colocated=False)
+    assert a < 0.95
+    light = ov.StageTimes(t_attn=1.0, t_ffn=0.4, t_dispatch=0.25,
+                          t_combine=0.25)
+    assert not ov.afd_2bo_has_bubbles(light)
+    a, _ = ov.steady_state_utilization("2BO", light, n_layers=48,
+                                       colocated=False)
+    assert a == pytest.approx(1.0, abs=0.02)
+
+
+def test_comm_bound_3bo_matches_cyclic_period():
+    st_ = ov.StageTimes(t_attn=0.5, t_ffn=0.5, t_dispatch=0.6, t_combine=0.6)
+    period = ov.afd_3bo_steady_period(st_)
+    assert period == pytest.approx(max(0.5, 0.6, (0.5 + 0.5 + 1.2) / 3))
+    a, _ = ov.steady_state_utilization("3BO", st_, n_layers=64)
+    assert a == pytest.approx(st_.t_attn / period, abs=0.03)
+
+
+def test_nbo_serial_utilization():
+    a, f = ov.steady_state_utilization("NBO", TIGHT, n_layers=32)
+    cycle = TIGHT.t_attn + TIGHT.t_comm + TIGHT.t_ffn
+    assert a == pytest.approx(TIGHT.t_attn / cycle, abs=0.02)
+
+
+def test_sbo_hides_dispatch_with_shared_gemm():
+    a_nbo, _ = ov.steady_state_utilization("NBO", TIGHT, n_layers=32)
+    a_sbo, f_sbo = ov.steady_state_utilization("SBO", TIGHT, n_layers=32)
+    # SBO accrues extra (shared) compute in the same span
+    assert f_sbo > a_nbo - 0.02
+
+
+def test_jitter_spike_survives_tight_schedule():
+    # §2.2: bubbles propagate — a 2× FFN spike's surplus never heals
+    delay = ov.jitter_propagation_delay(TIGHT, n_layers=32, factor=2.0)
+    assert delay == pytest.approx(TIGHT.t_ffn, abs=0.05)
+
+
+def test_slack_absorbs_jitter():
+    slack = ov.StageTimes(t_attn=1.0, t_ffn=0.2, t_dispatch=0.1,
+                          t_combine=0.1)
+    delay = ov.jitter_propagation_delay(slack, n_layers=32, factor=1.5)
+    assert delay <= 0.15
+
+
+@settings(max_examples=25, deadline=None)
+@given(t_a=st.floats(0.1, 2.0), t_f=st.floats(0.1, 2.0),
+       t_d=st.floats(0.05, 1.0), t_c=st.floats(0.05, 1.0))
+def test_makespan_respects_resource_lower_bounds(t_a, t_f, t_d, t_c):
+    st_ = ov.StageTimes(t_attn=t_a, t_ffn=t_f, t_dispatch=t_d, t_combine=t_c)
+    n_layers = 8
+    res = ov.simulate("3BO", st_, n_layers)
+    m = res.n_micro
+    # each resource is busy at least (work assigned) and the makespan
+    # can't beat the busiest resource or any single chain
+    assert res.makespan >= m * n_layers * max(t_a, t_f) - 1e-9
+    chain = n_layers * (t_a + t_d + t_f + t_c)
+    assert res.makespan >= chain - 1e-9
+    assert res.a_util <= 1.0 + 1e-9 and res.f_util <= 1.0 + 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(t_a=st.floats(0.1, 2.0), t_f=st.floats(0.1, 2.0))
+def test_utilizations_bounded(t_a, t_f):
+    st_ = ov.StageTimes(t_attn=t_a, t_ffn=t_f, t_dispatch=0.2, t_combine=0.2)
+    for mode in ("NBO", "SBO", "2BO", "3BO"):
+        res = ov.simulate(mode, st_, 6)
+        assert 0.0 <= res.a_util <= 1.0 + 1e-9
+        assert 0.0 <= res.f_util <= 1.0 + 1e-9

@@ -1,0 +1,65 @@
+"""AFD planner: plan construction, elastic rescale, §4 verdicts."""
+
+import pytest
+
+from repro.core import imbalance as imb
+from repro.core import planner as pln
+from repro.core.hardware import get_hardware
+from repro.core.modelspec import get_model
+
+DSV3 = get_model("DeepSeek-V3")
+H800 = get_hardware("H800")
+
+
+def test_plan_basics():
+    p = pln.plan_afd(DSV3, H800)
+    assert p.n_f >= 1 and p.n_a >= 1
+    assert p.memory_ok
+    assert p.slo_ok
+    assert 0.0 < p.hfu <= 1.0
+
+
+def test_dense_model_rejected():
+    with pytest.raises(pln.PlanningError):
+        pln.plan_afd(get_model("qwen3-8b"), H800)
+
+
+def test_forced_nf_respected():
+    p = pln.plan_afd(DSV3, H800, n_f=8)
+    assert p.n_f == 8
+
+
+def test_elastic_rescale_exact_integer():
+    p = pln.plan_afd(DSV3, H800, n_f=4)
+    sigma = 0.75
+    if (sigma * p.n_a) == int(sigma * p.n_a):
+        d = pln.elastic_rescale(p, sigma)
+        assert d.rounding == "exact"
+        assert d.new_n_a == int(sigma * p.n_a)
+
+
+def test_elastic_rescale_picks_best_rounding():
+    p = pln.plan_afd(DSV3, H800, n_f=4)
+    d = pln.elastic_rescale(p, 0.77)
+    af = imb.alpha_afd_floor(0.77, p.n_a, p.n_f)
+    ac = imb.alpha_afd_ceil(0.77, p.n_a, p.n_f)
+    assert d.alpha == pytest.approx(max(af, ac))
+    assert d.new_n_a <= p.n_a
+    assert d.alpha <= d.alpha_ep_reference + 1e-9 or \
+        d.rounding == "exact"    # AFD ≤ EP almost always (Fig. 6)
+
+
+def test_verdicts_match_paper_table3():
+    # DSv3 on H800: dead zone → not recommended; on GB200: recommended.
+    v_h800 = pln.afd_verdict(DSV3, H800)
+    assert not v_h800.afd_recommended
+    v_gb = pln.afd_verdict(DSV3, get_hardware("GB200"))
+    assert v_gb.afd_recommended
+    # Step3 (coarse, low sparsity) on GB200 — the paper's favourite
+    v_step3 = pln.afd_verdict(get_model("Step3"), get_hardware("GB200"))
+    assert v_step3.afd_recommended
+
+
+def test_throughput_metric_positive():
+    p = pln.plan_afd(DSV3, H800)
+    assert p.throughput_per_node > 0

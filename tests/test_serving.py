@@ -1,0 +1,123 @@
+"""Serving runtime: continuous batching, failure drain, SLO scheduler
+policies (§3.3 as live decisions), MTP acceptance harness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import budget as bdg
+from repro.core import planner as pln
+from repro.core.hardware import get_hardware
+from repro.core.modelspec import get_model
+from repro.models.model import make_model
+from repro.serving.engine import DecodeEngine, Request
+from repro.serving.mtp import speculative_generate
+from repro.serving.scheduler import SLOConfig, SLOScheduler, inject_jitter
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = configs.get_smoke_config("qwen1.5-0.5b")
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_engine_completes_all_requests(small_model):
+    cfg, model, params = small_model
+    eng = DecodeEngine(model, params, n_slots=3, max_len=32)
+    for i in range(7):
+        eng.submit(Request(rid=i, prompt=np.asarray([1 + i, 2, 3], np.int32),
+                           max_new_tokens=4))
+    eng.run(max_ticks=200)
+    assert eng.stats.prefills == 7
+    assert eng.stats.tokens_out >= 7 * 3
+
+
+def test_engine_output_matches_standalone_greedy(small_model):
+    cfg, model, params = small_model
+    prompt = np.asarray([5, 6, 7], np.int32)
+    # standalone greedy
+    lp, cache = model.prefill(params, {"tokens": jnp.asarray(prompt[None])},
+                              max_len=32)
+    ref = [int(jnp.argmax(lp[0]))]
+    cur = jnp.argmax(lp, -1).astype(jnp.int32)
+    for _ in range(3):
+        dl, cache = model.decode_step(params, cache, cur)
+        cur = jnp.argmax(dl, -1).astype(jnp.int32)
+        ref.append(int(cur[0]))
+    eng = DecodeEngine(model, params, n_slots=2, max_len=32)
+    req = Request(rid=0, prompt=prompt, max_new_tokens=4)
+    eng.submit(req)
+    eng.run(max_ticks=50)
+    assert req.output == ref
+
+
+def test_failure_drain_and_recovery(small_model):
+    cfg, model, params = small_model
+    eng = DecodeEngine(model, params, n_slots=2, max_len=32)
+    for i in range(4):
+        eng.submit(Request(rid=i, prompt=np.asarray([1, 2, 3], np.int32),
+                           max_new_tokens=3))
+    eng.tick()
+    replanned = []
+    n = eng.simulate_failure(0.25, replan=lambda f: replanned.append(f))
+    assert n == 2 and replanned == [0.75]
+    eng.run(max_ticks=100)
+    assert all(s is None for s in eng.slots) and not eng.queue
+    assert eng.stats.requeued == 2
+
+
+def test_scheduler_recovers_sigma():
+    sch = SLOScheduler(SLOConfig(deadline_factor=10.0), mode="ep", lam=4.0)
+    for lat in inject_jitter(1e-3, 200, sigma_true=0.8, seed=1):
+        sch.observe(lat)
+    d = sch.decide(t_budget=1e-3)
+    assert 0.7 <= d.sigma <= 0.9
+    assert d.alpha >= d.sigma                   # EP refill (Eq. 12)
+
+
+def test_scheduler_afd_discrete_rescale():
+    plan = pln.plan_afd(get_model("DeepSeek-V3"), get_hardware("H800"))
+    sch = SLOScheduler(SLOConfig(deadline_factor=10.0), mode="afd",
+                       plan=plan)
+    for lat in inject_jitter(1e-3, 200, sigma_true=0.75, seed=2):
+        sch.observe(lat)
+    d = sch.decide(t_budget=1e-3)
+    assert d.n_a is not None and d.n_a < plan.n_a
+    assert d.alpha <= d.alpha_other + 1e-9      # AFD ≤ EP reference
+
+
+def test_scheduler_straggler_derating():
+    sch = SLOScheduler(SLOConfig(deadline_factor=1.2), mode="ep", lam=4.0)
+    # 20 % of ticks blow way past the deadline
+    lats = [1e-3] * 80 + [5e-3] * 20
+    for lat in lats:
+        sch.observe(lat)
+    d = sch.decide(t_budget=1e-3)
+    assert d.straggler_rate > 0.05
+    assert d.sigma < 1.0
+
+
+def test_mtp_self_draft_perfect_acceptance(small_model):
+    cfg, model, params = small_model
+    toks, stats = speculative_generate(model, params, model, params,
+                                       jnp.asarray([1, 2, 3], jnp.int32),
+                                       n_tokens=10, k_draft=3)
+    assert stats.acceptance_rate == pytest.approx(1.0)
+    assert stats.l_accept >= 3.0
+
+
+def test_mtp_noisy_draft_partial_acceptance(small_model):
+    cfg, model, params = small_model
+    noisy = jax.tree_util.tree_map(
+        lambda x: x + 0.05 * jax.random.normal(jax.random.PRNGKey(7),
+                                               x.shape, x.dtype)
+        if x.dtype == jnp.float32 else x, params)
+    toks, stats = speculative_generate(model, params, model, noisy,
+                                       jnp.asarray([1, 2, 3], jnp.int32),
+                                       n_tokens=12, k_draft=4)
+    assert 1.0 <= stats.l_accept <= 5.0
+    assert len(toks) >= 12
