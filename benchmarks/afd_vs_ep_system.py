@@ -19,8 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.core import modelspec, planner
-from repro.core.hardware import get_hardware
+from repro.api import Deployment
 from repro.models.model import make_model
 from repro.parallel.afd import AFDRuntime, split_nodes
 
@@ -82,10 +81,10 @@ def main() -> None:
           f"cycles={rt.stats.dispatches};"
           f"match={abs(per_cycle - pred)/pred < 0.05}")
 
-    # planner verdicts (Table 3 narrative on the paper's own models)
+    # planner verdicts (Table 3 narrative on the paper's own models),
+    # through the repro.api façade
     for hw_name in ("H800", "GB200"):
-        v = planner.afd_verdict(modelspec.get_model("DeepSeek-V3"),
-                                get_hardware(hw_name))
+        v = Deployment("DeepSeek-V3", hw_name).verdict()
         print(f"afd_vs_ep_verdict_DSv3_{hw_name},0,"
               f"recommended={v.afd_recommended};"
               f"ceiling={v.afd_hfu_ceiling:.3f}")

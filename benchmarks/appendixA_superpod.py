@@ -4,29 +4,30 @@ Checks that the full sweep machinery converges to the closed form on
 GB200/GB300 (interconnect-bound regime), reproducing the 65.5 % value for
 M = 2048 models (DeepSeek-V3 ≡ Kimi-K2) and GLM-4.7's lower 49.2 %
 (M = 1536) — HFU depends only on M there.
+
+Runs as the named "superpod" sweep through ``repro.api``: one vectorized
+grid evaluation, closed forms via the ``Deployment`` façade.
 """
 
 from __future__ import annotations
 
 import time
 
-from repro.core import hfu_bound as hb
-from repro.core.budget import Scenario
-from repro.core.hardware import get_hardware
-from repro.core.modelspec import PAPER_MODELS
+from repro.api import Deployment, run_named_sweep
 
 
 def main() -> None:
     print("name,us_per_call,derived")
+    t0 = time.perf_counter()
+    res = run_named_sweep("superpod")
+    ceilings = {(r["model"], r["hardware"]): r
+                for r in res.ceilings(feasible_only=False)}
+    us = (time.perf_counter() - t0) * 1e6 / max(len(ceilings), 1)
     for hw_name in ("GB200", "GB300"):
-        hw = get_hardware(hw_name)
-        for mname, model in PAPER_MODELS.items():
-            t0 = time.perf_counter()
-            closed = hb.superpod_hfu_closed_form(model, hw)
-            swept = hb.hfu_ceiling(model, hw, Scenario(),
-                                   feasible_only=False).hfu
-            us = (time.perf_counter() - t0) * 1e6
-            print(f"appA_{hw_name}_{mname},{us:.0f},"
+        for model in (m.name for m in res.models):
+            closed = Deployment(model, hw_name).superpod_closed_form()
+            swept = ceilings[(model, hw_name)]["hfu"]
+            print(f"appA_{hw_name}_{model},{us:.0f},"
                   f"closed={closed:.4f};swept={swept:.4f};"
                   f"match={abs(closed - swept) < 0.02}")
 

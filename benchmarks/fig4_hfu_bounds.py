@@ -6,38 +6,36 @@ Reproduces the paper's headline numbers:
   * GB200/GB300 Superpods: 65.5 % for M = 2048 models (Appendix-A closed
     form), 49.2 % for GLM-4.7 (M = 1536);
   * memory-capacity infeasibility flags ("HBM -" annotations).
+
+Runs through the ``repro.api`` front door: the whole grid is evaluated by
+the vectorized ``sweep()`` engine (named sweep "fig4"), per-cell dead zones
+come from the ``Deployment`` façade.
 """
 
 from __future__ import annotations
 
 import time
 
+from repro.api import Deployment, run_named_sweep
 from repro.core import hfu_bound as hb
-from repro.core.budget import Scenario
-from repro.core.hardware import HARDWARE, get_hardware
-from repro.core.modelspec import PAPER_MODELS
-
-PLATFORMS = ["H20", "H100", "H200", "H800", "B200", "B300", "GB200", "GB300"]
 
 
 def main() -> None:
-    scen = Scenario()            # L_accept = 1.7, t_g = 15 ms (paper's setup)
     print("name,us_per_call,derived")
     t0 = time.perf_counter()
-    n = 0
-    for mname, model in PAPER_MODELS.items():
-        for hw_name in PLATFORMS:
-            hw = get_hardware(hw_name)
-            best = hb.hfu_ceiling(model, hw, scen, feasible_only=False)
-            feas = hb.memory_feasible(model, hw, best.n_f)
-            dz = hb.dead_zone(model, hw, scen)
-            n += 1
-            print(f"fig4_{mname}_{hw_name},0,"
-                  f"hfu={best.hfu:.4f};nf={best.n_f};"
-                  f"regime={best.regime};feasible={feas};"
-                  f"dead_zone_nf={dz[0] if dz else '-'}")
-    us = (time.perf_counter() - t0) * 1e6 / n
-    print(f"fig4_sweep,{us:.1f},cells={n}")
+    res = run_named_sweep("fig4")                    # vectorized grid
+    ceilings = res.ceilings(feasible_only=False)
+    sweep_s = time.perf_counter() - t0
+    for rec in ceilings:
+        dep = Deployment(rec["model"], rec["hardware"])
+        dz = dep.dead_zone()
+        print(f"fig4_{rec['model']}_{rec['hardware']},0,"
+              f"hfu={rec['hfu']:.4f};nf={rec['n_f']};"
+              f"regime={rec['regime']};feasible={rec['feasible']};"
+              f"dead_zone_nf={dz[0] if dz else '-'}")
+    us = sweep_s * 1e6 / max(res.size, 1)
+    print(f"fig4_sweep,{us:.1f},cells={len(ceilings)};"
+          f"grid_points={res.size}")
     print(f"fig4_ep_reference,0,hfu={hb.LARGE_EP_REFERENCE_HFU};"
           f"tokens_per_expert={hb.LARGE_EP_REFERENCE_TOKENS_PER_EXPERT}")
 

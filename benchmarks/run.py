@@ -1,13 +1,21 @@
 """Run every benchmark (one per paper table/figure).
 
-    PYTHONPATH=src python -m benchmarks.run            # all
-    PYTHONPATH=src python -m benchmarks.run fig4 fig6  # substring filter
+    PYTHONPATH=src python -m benchmarks.run                  # all
+    PYTHONPATH=src python -m benchmarks.run fig4 fig6        # substring filter
+    PYTHONPATH=src python -m benchmarks.run --json out.json  # machine-readable
 
-Each module prints ``name,us_per_call,derived`` CSV rows.
+Each module prints ``name,us_per_call,derived`` CSV rows. ``--json`` also
+captures those rows into a structured file: one entry per row with the
+``derived`` payload parsed into key/value pairs — the input for
+``tools/check_golden.py``, which diffs against the committed golden with
+timing-dependent fields normalized out.
 """
 
 from __future__ import annotations
 
+import contextlib
+import io
+import json
 import sys
 import time
 import traceback
@@ -24,22 +32,86 @@ MODULES = [
 ]
 
 
+def parse_derived(derived: str) -> dict:
+    """Parse ``k1=v1;k2=v2`` payloads (plain tokens become {token: true})."""
+    out = {}
+    for part in derived.split(";"):
+        if not part:
+            continue
+        if "=" in part:
+            k, v = part.split("=", 1)
+            out[k] = v
+        else:
+            out[part] = "true"
+    return out
+
+
+def parse_rows(module: str, text: str) -> list:
+    """Extract ``name,us_per_call,derived`` rows from a module's stdout."""
+    rows = []
+    for line in text.splitlines():
+        if line.startswith(("#", "name,us_per_call")) or "," not in line:
+            continue
+        parts = line.split(",", 2)
+        if len(parts) < 2:
+            continue
+        name, us = parts[0], parts[1]
+        try:
+            us_val = float(us)
+        except ValueError:
+            continue
+        rows.append({
+            "module": module,
+            "name": name,
+            "us_per_call": us_val,
+            "derived": parse_derived(parts[2] if len(parts) > 2 else ""),
+        })
+    return rows
+
+
 def main() -> None:
-    filters = [a for a in sys.argv[1:] if not a.startswith("-")]
+    args = sys.argv[1:]
+    json_path = None
+    if "--json" in args:
+        i = args.index("--json")
+        try:
+            json_path = args[i + 1]
+        except IndexError:
+            raise SystemExit("--json needs a path argument")
+        del args[i:i + 2]
+    filters = [a for a in args if not a.startswith("-")]
+
     failures = 0
+    all_rows = []
     for name in MODULES:
         if filters and not any(f in name for f in filters):
             continue
         print(f"### {name}")
         t0 = time.time()
+        buf = io.StringIO()
         try:
             mod = __import__(name, fromlist=["main"])
-            mod.main()
+            if json_path is not None:
+                with contextlib.redirect_stdout(buf):
+                    mod.main()
+                captured = buf.getvalue()
+                sys.stdout.write(captured)
+                all_rows.extend(parse_rows(name, captured))
+            else:
+                mod.main()
             print(f"### {name} done in {time.time()-t0:.1f}s\n")
         except Exception:
+            sys.stdout.write(buf.getvalue())
             traceback.print_exc()
             failures += 1
             print(f"### {name} FAILED\n")
+
+    if json_path is not None:
+        with open(json_path, "w") as fh:
+            json.dump({"rows": all_rows, "failures": failures}, fh,
+                      indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"wrote {len(all_rows)} rows to {json_path}")
     if failures:
         raise SystemExit(f"{failures} benchmark(s) failed")
 

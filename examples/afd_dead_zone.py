@@ -4,46 +4,46 @@ Prints the arithmetic-intensity regimes, the HFU dead zone on standard
 clusters vs Superpods, and the discrete-scaling imbalance penalty — pure
 analysis, runs in milliseconds.
 
+Everything goes through the ``repro.api`` front door: the ``Deployment``
+façade for single-triple questions, the named "dead-zone" sweep (vectorized
+over the whole grid) for the Fig. 4 comparison.
+
     PYTHONPATH=src python examples/afd_dead_zone.py
 """
 
-from repro.core import comm_roofline as cr
-from repro.core import hfu_bound as hb
+from repro.api import Deployment, run_named_sweep
 from repro.core import imbalance as imb
-from repro.core.budget import Scenario, stage_budget
-from repro.core.hardware import get_hardware
-from repro.core.modelspec import PAPER_MODELS, get_model
+from repro.core.modelspec import PAPER_MODELS
 
 
 def main() -> None:
-    dsv3 = get_model("DeepSeek-V3")
-    h800 = get_hardware("H800")
-    t_b = stage_budget(dsv3, Scenario())
+    dsv3_h800 = Deployment("DeepSeek-V3", "H800")
+    t_b = dsv3_h800.stage_budget()
     print(f"DeepSeek-V3 stage budget t_B = {t_b*1e3:.3f} ms "
           f"(SLO 50 ms × L_accept 1.7, t_g 15 ms, 58 layers × 3BO)\n")
 
     print("Fig. 2 — intensity regimes on H800:")
     last = None
-    for p in cr.intensity_sweep(dsv3, h800, n_f_max=40):
+    for p in dsv3_h800.intensity_sweep(n_f_max=40):
         if p.regime != last:
             print(f"  N_F={p.n_f:3d}: {p.regime:18s} "
                   f"(B_rank={p.b_rank:6.0f}, local experts={p.local_experts})")
             last = p.regime
 
-    print("\nFig. 4 — HFU ceilings (AFD) vs the ≈60% large-EP reference:")
-    for hw_name in ("H20", "H800", "GB200"):
-        hw = get_hardware(hw_name)
-        best = hb.hfu_ceiling(dsv3, hw, feasible_only=False)
-        dz = hb.dead_zone(dsv3, hw)
-        print(f"  {hw_name:6s}: ceiling {best.hfu:6.1%} at N_F={best.n_f:3d} "
-              f"({best.regime}); dead zone from N_F="
+    print("\nFig. 4 — HFU ceilings (AFD) vs the ≈60% large-EP reference")
+    print("(named sweep 'dead-zone', one vectorized grid evaluation):")
+    res = run_named_sweep("dead-zone")
+    for rec in res.ceilings(feasible_only=False):
+        dz = Deployment(rec.model, rec.hardware).dead_zone()
+        print(f"  {rec.hardware:6s}: ceiling {rec.hfu:6.1%} at "
+              f"N_F={rec.n_f:3d} ({rec.regime}); dead zone from N_F="
               f"{dz[0] if dz else '—'}")
 
     print("\nAppendix A — Superpod closed form (M decides everything):")
-    gb200 = get_hardware("GB200")
-    for name, m in PAPER_MODELS.items():
-        print(f"  {name:12s} M={m.moe_intermediate:5d} → "
-              f"HFU = {hb.superpod_hfu_closed_form(m, gb200):6.1%}")
+    for name in PAPER_MODELS:
+        dep = Deployment(name, "GB200")
+        print(f"  {name:12s} M={dep.model.moe_intermediate:5d} → "
+              f"HFU = {dep.superpod_closed_form():6.1%}")
 
     print("\nFig. 6 — discrete-scaling penalty under EP imbalance (σ=0.8):")
     for lam in (2.0, 4.0, 5.0):

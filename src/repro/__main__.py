@@ -1,0 +1,6 @@
+"""Entry point: ``python -m repro {plan,sweep,bench,list}``."""
+
+from repro.api.cli import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,29 @@
+"""``repro.api`` — the front door over ``repro.core``.
+
+Public surface:
+  * :class:`Deployment` — façade binding (model, hardware, scenario) to the
+    planner / roofline / imbalance analytics.
+  * :func:`sweep` / :func:`run_named_sweep` — vectorized grid evaluation of
+    the §3 hot path (thousands of points in one numpy shot).
+  * :class:`Record` — JSON-serializable results.
+  * ``registry`` — name resolution for models / hardware / scenarios /
+    named sweeps (auto-discovers ``repro.configs`` architectures).
+
+CLI: ``python -m repro {plan,sweep,bench,list}``.
+"""
+
+from repro.api import registry
+from repro.api.deployment import Deployment
+from repro.api.records import Record, dump_records, load_records
+from repro.api.sweep import (SweepResult, run_named_sweep, scalar_reference,
+                             sweep)
+
+list_models = registry.list_models
+list_hardware = registry.list_hardware
+list_sweeps = registry.list_sweeps
+
+__all__ = [
+    "Deployment", "Record", "SweepResult", "dump_records", "load_records",
+    "registry", "run_named_sweep", "scalar_reference", "sweep",
+    "list_models", "list_hardware", "list_sweeps",
+]

@@ -1,0 +1,254 @@
+"""``python -m repro`` — the command-line front door.
+
+Subcommands:
+  plan   — run the §4 planner for one (model, hardware, scenario) triple.
+  sweep  — vectorized §3 grid (named sweep or explicit axes); JSON/CSV out.
+  bench  — scalar-loop vs vectorized-sweep equivalence + speedup check.
+  list   — registry contents (models, hardware, scenarios, sweeps).
+
+Pure-analysis only: nothing here imports jax, so the CLI starts in
+milliseconds and runs anywhere.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import List, Optional
+
+import numpy as np
+
+
+def _split(arg: Optional[str]) -> Optional[List[str]]:
+    if arg is None:
+        return None
+    return [a.strip() for a in arg.split(",") if a.strip()]
+
+
+def _floats(arg: Optional[str]):
+    vals = _split(arg)
+    return None if vals is None else [float(v) for v in vals]
+
+
+def cmd_list(args) -> int:
+    from repro.api import registry
+    kind = args.kind
+    if kind in ("models", "all"):
+        print("models:")
+        for m in registry.list_models():
+            spec = registry.resolve_model(m)
+            tag = ("MoE" if spec.is_moe else "dense")
+            print(f"  {m:22s} {tag:5s} H={spec.hidden_size:5d} "
+                  f"M={spec.moe_intermediate:5d} E={spec.n_routed_experts:3d} "
+                  f"k={spec.top_k}")
+    if kind in ("hardware", "all"):
+        print("hardware:")
+        for h in registry.list_hardware():
+            hw = registry.resolve_hardware(h)
+            pod = " superpod" if hw.superpod else ""
+            print(f"  {h:8s} peak={hw.peak_flops/1e12:6.0f}T "
+                  f"hbm={hw.hbm_bw/1e12:.2f}TB/s cap={hw.hbm_cap/1e9:.0f}GB"
+                  f"{pod}")
+    if kind in ("scenarios", "all"):
+        print("scenarios:")
+        for s, scen in sorted(registry.SCENARIOS.items()):
+            print(f"  {s:12s} slo={scen.slo_tpot*1e3:.0f}ms "
+                  f"l_accept={scen.l_accept} t_gap={scen.t_gap*1e3:.0f}ms "
+                  f"n_bo={scen.n_bo}")
+    if kind in ("sweeps", "all"):
+        print("sweeps:")
+        for s in registry.list_sweeps():
+            params = registry.named_sweep(s)
+            print(f"  {s:12s} models={len(params['models'])} "
+                  f"hardware={len(params['hardware'])}")
+    return 0
+
+
+def cmd_plan(args) -> int:
+    from repro.api import Deployment
+    from repro.core.planner import PlanningError
+    dep = Deployment(args.model, args.hardware, args.scenario,
+                     bw_scale=args.bw_scale)
+    try:
+        if args.sigma is not None:
+            rec = dep.rescale(args.sigma, n_f=args.n_f)
+        else:
+            rec = dep.plan(n_f=args.n_f)
+    except PlanningError as e:
+        print(f"planning failed: {e}", file=sys.stderr)
+        return 2
+    verdict = dep.verdict()
+    if args.json:
+        print(json.dumps({"plan": dict(rec), "verdict": dict(verdict)},
+                         indent=2, sort_keys=True))
+        return 0
+    plan = rec.get("plan", rec)
+    print(f"{dep!r}")
+    print(f"  N_F={plan['n_f']}  N_A={plan['n_a']}  "
+          f"λ={plan['lambda_afd']:.2f}  total={plan['total_nodes']} nodes")
+    print(f"  t_B={plan['t_budget']*1e3:.3f} ms  B_rank={plan['b_rank']:.0f} "
+          f"tok  HFU={plan['hfu']:.1%}  S_t={plan['temporal_sparsity']:.3f}")
+    print(f"  regime={plan['regime']}  bottleneck={plan['bottleneck']}  "
+          f"bubble_free={plan['bubble_free']}  slo_ok={plan['slo_ok']}")
+    if args.sigma is not None:
+        print(f"  σ={rec['sigma']}: N_A {rec['old_n_a']} → {rec['new_n_a']} "
+              f"({rec['rounding']}), α={rec['alpha']:.4f} "
+              f"vs EP {rec['alpha_ep_reference']:.4f}")
+    mark = "✓" if verdict["afd_recommended"] else "✗"
+    print(f"  AFD recommended: {mark} "
+          f"(ceiling {verdict['afd_hfu_ceiling']:.1%} vs "
+          f"{verdict['ep_reference_hfu']:.0%} large-EP reference)")
+    return 0
+
+
+def cmd_sweep(args) -> int:
+    from repro.api import run_named_sweep, sweep
+    t0 = time.perf_counter()
+    if args.name:
+        overrides = {}
+        if args.n_f_max:
+            overrides["n_f"] = range(1, args.n_f_max + 1)
+        if args.scenario != "default":
+            overrides["scenarios"] = args.scenario
+        res = run_named_sweep(args.name, **overrides)
+    else:
+        models = _split(args.models)
+        hardware = _split(args.hardware)
+        if not models or not hardware:
+            print("sweep needs --name or both --models and --hardware",
+                  file=sys.stderr)
+            return 2
+        res = sweep(models, hardware,
+                    n_f=range(1, args.n_f_max + 1) if args.n_f_max else None,
+                    scenarios=args.scenario,
+                    bw_scale=_floats(args.bw_scale) or 1.0,
+                    b_cap=_floats(args.b_cap))
+    dt = time.perf_counter() - t0
+    if args.json:
+        res.to_json(args.json)
+    ceilings = res.ceilings(feasible_only=not args.infeasible)
+    print(f"# {res.size} grid points in {dt*1e3:.1f} ms"
+          + (f" → {args.json}" if args.json else ""))
+    extra = [k for k in ("bw_scale", "b_cap")
+             if ceilings and k in ceilings[0]]
+    print("model,hardware,scenario," + "".join(f"{k}," for k in extra)
+          + "n_f,hfu,regime,bottleneck,feasible")
+    for r in ceilings:
+        cols = "".join(f"{r[k]:g}," for k in extra)
+        print(f"{r['model']},{r['hardware']},{r['scenario']},{cols}"
+              f"{r['n_f']},{r['hfu']:.4f},{r['regime']},{r['bottleneck']},"
+              f"{r['feasible']}")
+    return 0
+
+
+def cmd_bench(args) -> int:
+    from repro.api import scalar_reference, sweep
+    from repro.core.modelspec import PAPER_MODELS
+    models = list(PAPER_MODELS)
+    hardware = ["H20", "H100", "H200", "H800", "B200", "B300", "GB200",
+                "GB300"]
+    n_f = range(1, args.n_f_max + 1)
+    grid = len(models) * len(hardware) * args.n_f_max
+
+    t0 = time.perf_counter()
+    vec = sweep(models, hardware, n_f=n_f)
+    t_vec = time.perf_counter() - t0
+    for _ in range(args.repeat - 1):           # warm best-of for stability
+        t0 = time.perf_counter()
+        vec = sweep(models, hardware, n_f=n_f)
+        t_vec = min(t_vec, time.perf_counter() - t0)
+
+    t0 = time.perf_counter()
+    ref = scalar_reference(models, hardware, n_f=n_f)
+    t_ref = time.perf_counter() - t0
+
+    exact = all(
+        bool(np.all((vec.fields[f] == ref.fields[f])
+                    | (_nan_mask(vec.fields[f]) & _nan_mask(ref.fields[f]))))
+        for f in vec.fields)
+    speedup = t_ref / t_vec
+    print("name,us_per_call,derived")
+    print(f"api_sweep_vectorized,{t_vec*1e6:.0f},points={vec.size}")
+    print(f"api_sweep_scalar_loop,{t_ref*1e6:.0f},points={ref.size}")
+    print(f"api_sweep_equivalence,0,bit_exact={exact};points={vec.size}")
+    print(f"api_sweep_speedup,0,speedup={speedup:.1f}")
+    if not exact:
+        print("FAIL: vectorized sweep diverged from the scalar reference",
+              file=sys.stderr)
+        return 1
+    if grid < 1000:
+        print(f"note: grid {grid} < 1000 points; raise --n-f-max",
+              file=sys.stderr)
+    return 0
+
+
+def _nan_mask(a: np.ndarray) -> np.ndarray:
+    return (a != a) if a.dtype.kind == "f" else np.zeros(a.shape, bool)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro",
+        description="AFD analysis front door (paper §2–§4).")
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    pl = sub.add_parser("plan", help="§4 planner for one deployment triple")
+    pl.add_argument("--model", required=True)
+    pl.add_argument("--hardware", required=True)
+    pl.add_argument("--scenario", default="default")
+    pl.add_argument("--n-f", type=int, default=None,
+                    help="force the FFN node count instead of optimizing")
+    pl.add_argument("--sigma", type=float, default=None,
+                    help="apply the §3.3 elastic rescale under imbalance σ")
+    pl.add_argument("--bw-scale", type=float, default=1.0)
+    pl.add_argument("--json", action="store_true")
+    pl.set_defaults(fn=cmd_plan)
+
+    sw = sub.add_parser("sweep", help="vectorized §3 grid evaluation")
+    sw.add_argument("--name", default=None,
+                    help="named sweep (see: python -m repro list sweeps)")
+    sw.add_argument("--models", default=None, help="comma-separated")
+    sw.add_argument("--hardware", default=None, help="comma-separated")
+    sw.add_argument("--scenario", default="default")
+    sw.add_argument("--n-f-max", type=int, default=None)
+    sw.add_argument("--bw-scale", default=None,
+                    help="comma-separated interconnect scale factors")
+    sw.add_argument("--b-cap", default=None,
+                    help="comma-separated per-rank token inflow caps")
+    sw.add_argument("--infeasible", action="store_true",
+                    help="include HBM-infeasible points in ceilings")
+    sw.add_argument("--json", default=None, metavar="PATH",
+                    help="write the full record grid as JSON")
+    sw.set_defaults(fn=cmd_sweep)
+
+    be = sub.add_parser("bench",
+                        help="scalar vs vectorized equivalence + speedup")
+    be.add_argument("--n-f-max", type=int, default=24,
+                    help="grid is 6 models × 8 platforms × n_f_max points")
+    be.add_argument("--repeat", type=int, default=3)
+    be.set_defaults(fn=cmd_bench)
+
+    ls = sub.add_parser("list", help="registry contents")
+    ls.add_argument("kind", nargs="?", default="all",
+                    choices=["all", "models", "hardware", "scenarios",
+                             "sweeps"])
+    ls.set_defaults(fn=cmd_list)
+    return p
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    try:
+        return args.fn(args)
+    except (KeyError, ValueError) as e:
+        # Registry lookups and parameter validation raise with the list of
+        # known names / the violated constraint — that IS the user message.
+        msg = e.args[0] if e.args else str(e)
+        print(f"error: {msg}", file=sys.stderr)
+        return 2
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

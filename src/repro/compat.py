@@ -1,0 +1,59 @@
+"""jax version compatibility layer.
+
+The repo targets jax ≥ 0.6 (``jax.make_mesh(axis_types=...)``,
+``jax.sharding.AxisType``, ``jax.shard_map(check_vma=...)``) but must run —
+or at least degrade to clean pytest skips — on the 0.4.x CPU wheels baked
+into CI containers. Everything version-sensitive funnels through here so
+call sites never touch ``jax.__version__`` themselves.
+
+Feature flags (booleans, probed once at import):
+  HAS_MESH_AXIS_TYPES     — jax.sharding.AxisType exists and jax.make_mesh
+                            accepts ``axis_types`` (jax ≥ 0.6).
+  HAS_SHARD_MAP_CHECK_VMA — shard_map takes ``check_vma`` (jax ≥ 0.6;
+                            0.4.x spells it ``check_rep``).
+
+Portable wrappers:
+  make_mesh(shape, axes)  — Auto axis types when supported, plain Mesh
+                            otherwise (semantics are identical for the
+                            explicitly-sharded programs in this repo).
+  shard_map(..., check_vma=False)
+                          — forwards to ``check_vma`` or ``check_rep``
+                            as the installed jax expects.
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Optional, Sequence
+
+import jax
+
+try:  # jax ≥ 0.6 exposes shard_map at top level
+    _shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover — 0.4.x fallback
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+HAS_MESH_AXIS_TYPES = hasattr(jax.sharding, "AxisType")
+HAS_SHARD_MAP_CHECK_VMA = (
+    "check_vma" in inspect.signature(_shard_map).parameters)
+
+JAX_06_SKIP_REASON = (
+    f"requires jax >= 0.6 mesh/shard_map APIs (installed: {jax.__version__})")
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str], *,
+              devices: Optional[Sequence] = None):
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    kwargs = {} if devices is None else {"devices": devices}
+    if HAS_MESH_AXIS_TYPES:
+        kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(tuple(shape), tuple(axes), **kwargs)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """shard_map portable over the check_vma (≥0.6) / check_rep (0.4) rename."""
+    if HAS_SHARD_MAP_CHECK_VMA:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=check_vma)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

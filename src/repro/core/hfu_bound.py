@@ -62,11 +62,25 @@ def memory_feasible(model: MoEModelSpec, hw: HardwareSpec, n_f: int,
     return expert_bytes <= capacity
 
 
+def default_n_f_max(model: MoEModelSpec, hw: HardwareSpec) -> int:
+    """Default sweep bound: well past the max-intensity knee (≥ 16)."""
+    return max(2 * math.ceil(model.n_routed_experts / hw.gpus_per_node), 16)
+
+
 def hfu_point(model: MoEModelSpec, hw: HardwareSpec, n_f: int,
-              scen: Optional[bdg.Scenario] = None) -> HFUPoint:
+              scen: Optional[bdg.Scenario] = None,
+              b_cap: Optional[float] = None) -> HFUPoint:
+    """One (model, hardware, N_F) cell of the Fig. 4 sweep.
+
+    ``b_cap`` optionally caps the Eq. 9 token inflow per rank — modelling a
+    deployment whose offered decode batch is smaller than what the
+    interconnect could deliver within t_B.
+    """
     scen = scen or bdg.Scenario()
     t_b = bdg.stage_budget(model, scen)
     inflow = cr.b_rank(model, hw, t_b, n_f)
+    if b_cap is not None:
+        inflow = min(inflow, b_cap)
     g_local = cr.local_experts(model, hw, n_f)
     tokens_per_expert = inflow / g_local
     flops = bdg.grouped_gemm_flops(g_local, tokens_per_expert,
@@ -114,8 +128,7 @@ def hfu_sweep(model: MoEModelSpec, hw: HardwareSpec,
               n_f_max: Optional[int] = None) -> List[HFUPoint]:
     """Fig. 4: HFU upper bound vs N_F for one (model, platform)."""
     if n_f_max is None:
-        n_f_max = max(2 * math.ceil(model.n_routed_experts / hw.gpus_per_node),
-                      16)
+        n_f_max = default_n_f_max(model, hw)
     return [hfu_point(model, hw, n_f, scen) for n_f in range(1, n_f_max + 1)]
 
 

@@ -18,10 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-try:  # jax ≥ 0.6 exposes shard_map at top level (check_vma kw)
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
+from repro.compat import shard_map
 
 from repro.kernels import ops as kops
 

@@ -37,11 +37,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-try:  # jax ≥ 0.6 exposes shard_map at top level
-    from jax import shard_map as _shard_map_mod  # type: ignore
-    shard_map = jax.shard_map
-except Exception:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
+from repro.compat import shard_map
 
 from repro.kernels import ops as kops
 from repro.models import moe as moe_mod

@@ -1,0 +1,251 @@
+"""repro.api: registry resolution, Deployment façade, vectorized sweep
+equivalence (bit-exact vs the scalar core) and speed, CLI smoke."""
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import (Deployment, Record, registry, run_named_sweep,
+                       scalar_reference, sweep)
+from repro.core import hfu_bound as hb
+from repro.core.budget import Scenario
+from repro.core.hardware import get_hardware
+from repro.core.modelspec import PAPER_MODELS, get_model
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _fields_equal(a: np.ndarray, b: np.ndarray) -> bool:
+    if a.dtype.kind == "f":
+        return bool(np.all((a == b) | (np.isnan(a) & np.isnan(b))))
+    return bool(np.all(a == b))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_resolves_names_and_specs():
+    m = registry.resolve_model("DeepSeek-V3")
+    assert m.n_routed_experts == 256
+    assert registry.resolve_model(m) is m
+    h = registry.resolve_hardware("H800")
+    assert registry.resolve_hardware(h) is h
+    assert registry.resolve_scenario("default") == Scenario()
+    with pytest.raises(KeyError):
+        registry.resolve_model("no-such-model")
+    with pytest.raises(KeyError):
+        registry.resolve_hardware("no-such-hw")
+    with pytest.raises(KeyError):
+        registry.resolve_scenario("no-such-scenario")
+
+
+def test_registry_autodiscovers_configs():
+    # An arch id known to repro.configs but resolved through its ArchConfig.
+    spec = registry.spec_from_arch_config(
+        __import__("repro.configs", fromlist=["get_config"])
+        .get_config("granite-moe-1b-a400m"))
+    assert spec.is_moe and spec.n_routed_experts == 32 and spec.top_k == 8
+
+
+def test_registry_bw_scale_builds_derated_spec():
+    h = registry.resolve_hardware("H800", bw_scale=0.5)
+    base = get_hardware("H800")
+    assert h.scale_up_bw == base.scale_up_bw * 0.5
+    assert h.scale_out_bw == base.scale_out_bw * 0.5
+    assert h.name.startswith("H800@bw")
+
+
+def test_named_sweeps_listed():
+    for name in ("fig4", "dead-zone", "superpod"):
+        assert name in registry.list_sweeps()
+        assert "models" in registry.named_sweep(name)
+
+
+# ---------------------------------------------------------------------------
+# Deployment façade
+# ---------------------------------------------------------------------------
+
+def test_deployment_matches_core():
+    dep = Deployment("DeepSeek-V3", "H800")
+    model, hw = get_model("DeepSeek-V3"), get_hardware("H800")
+    best = hb.hfu_ceiling(model, hw, Scenario(), feasible_only=False)
+    rec = dep.hfu_ceiling(feasible_only=False)
+    assert rec.hfu == best.hfu and rec.n_f == best.n_f
+    assert isinstance(rec, Record)
+    json.loads(rec.to_json())                    # JSON-serializable
+    plan = dep.plan()
+    assert plan.n_a >= 1 and plan.n_f >= 1
+    v = dep.verdict()
+    assert v.ep_reference_hfu == hb.LARGE_EP_REFERENCE_HFU
+
+
+def test_deployment_rescale_and_describe():
+    dep = Deployment("Kimi-K2", "GB200")
+    rec = dep.rescale(0.8)
+    assert 0 < rec.alpha <= 1.0 and rec.new_n_a <= rec.old_n_a
+    d = dep.describe()
+    assert d.model == "Kimi-K2" and d.superpod is True
+
+
+# ---------------------------------------------------------------------------
+# vectorized sweep: bit-exact equivalence with the scalar core
+# ---------------------------------------------------------------------------
+
+def test_sweep_matches_scalar_small_grid():
+    kw = dict(models=["DeepSeek-V3", "Step3", "qwen3-8b", "mamba2-2.7b"],
+              hardware=["H800", "GB200", "TPUv5e"],
+              n_f=range(1, 9),
+              scenarios=["default", "tight-slo"],
+              bw_scale=[0.5, 1.0],
+              b_cap=[256.0, float("inf")])
+    vec, ref = sweep(**kw), scalar_reference(**kw)
+    assert vec.shape == ref.shape
+    for name in vec.fields:
+        assert _fields_equal(vec.fields[name], ref.fields[name]), name
+
+
+def test_sweep_point_matches_hfu_point_fields():
+    vec = sweep("DeepSeek-V3", "H800", n_f=range(1, 17))
+    for n in range(16):
+        pt = hb.hfu_point(get_model("DeepSeek-V3"), get_hardware("H800"),
+                          n + 1, Scenario())
+        idx = (0, 0, 0, 0, 0, n)
+        assert vec.fields["hfu"][idx] == pt.hfu
+        assert vec.fields["ofu"][idx] == pt.ofu
+        assert vec.fields["b_rank"][idx] == pt.b_rank
+        assert str(vec.fields["regime"][idx]) == pt.regime
+        assert str(vec.fields["bottleneck"][idx]) == pt.bottleneck
+        assert bool(vec.fields["feasible"][idx]) == pt.feasible
+
+
+def test_sweep_ceilings_match_hfu_ceiling():
+    res = run_named_sweep("fig4")
+    by_cell = {(r["model"], r["hardware"]): r
+               for r in res.ceilings(feasible_only=False)}
+    for mname, model in PAPER_MODELS.items():
+        for hw_name in registry.FIG4_PLATFORMS:
+            best = hb.hfu_ceiling(model, get_hardware(hw_name),
+                                  feasible_only=False)
+            rec = by_cell[(mname, hw_name)]
+            assert rec["hfu"] == best.hfu
+            assert rec["n_f"] == best.n_f
+            assert rec["regime"] == best.regime
+
+
+def test_sweep_1000_points_bit_exact_and_10x_faster():
+    """Acceptance: a ≥1000-point grid reproduces the scalar HFU/regime
+    verdicts bit-exactly and the vectorized engine is ≥10× faster than the
+    equivalent Python loop."""
+    models = list(PAPER_MODELS)
+    hardware = registry.FIG4_PLATFORMS
+    n_f = range(1, 25)
+    assert len(models) * len(hardware) * 24 >= 1000
+
+    t_vec = float("inf")
+    for _ in range(3):                      # best-of-3 against CI jitter
+        t0 = time.perf_counter()
+        vec = sweep(models, hardware, n_f=n_f)
+        t_vec = min(t_vec, time.perf_counter() - t0)
+    t0 = time.perf_counter()
+    ref = scalar_reference(models, hardware, n_f=n_f)
+    t_ref = time.perf_counter() - t0
+
+    assert vec.size >= 1000
+    for name in vec.fields:
+        assert _fields_equal(vec.fields[name], ref.fields[name]), name
+    assert t_ref / t_vec >= 10.0, (
+        f"vectorized sweep only {t_ref/t_vec:.1f}x faster "
+        f"({t_vec*1e3:.2f} ms vs {t_ref*1e3:.2f} ms)")
+
+
+def test_sweep_records_and_json_roundtrip(tmp_path):
+    res = sweep("Step3", "B200", n_f=range(1, 5))
+    recs = res.records()
+    assert len(recs) == 4
+    assert {r["n_f"] for r in recs} == {1, 2, 3, 4}
+    path = tmp_path / "sweep.json"
+    res.to_json(str(path))
+    loaded = json.loads(path.read_text())
+    assert len(loaded) == 4 and loaded[0]["model"] == "Step3"
+
+
+def test_sweep_matches_scalar_on_custom_nonsuperpod_spec():
+    """b_rank collapses to scale-up when scale_out_bw is None even without
+    the superpod flag, but regime classification keys on the flag alone —
+    the vectorized path must reproduce both scalar behaviors."""
+    import dataclasses
+    hw = dataclasses.replace(get_hardware("H800"), name="custom-no-so",
+                             scale_out_bw=None)
+    assert not hw.superpod
+    kw = dict(models="DeepSeek-V3", hardware=hw, n_f=range(1, 13))
+    vec, ref = sweep(**kw), scalar_reference(**kw)
+    for name in vec.fields:
+        assert _fields_equal(vec.fields[name], ref.fields[name]), name
+
+
+def test_custom_scenarios_get_distinct_labels():
+    scens = [Scenario(slo_tpot=0.04), Scenario(slo_tpot=0.08)]
+    res = sweep("Step3", "B200", n_f=[1], scenarios=scens)
+    labels = {r["scenario"] for r in res.records()}
+    assert len(labels) == 2
+
+
+def test_sweep_rejects_bad_n_f():
+    with pytest.raises(ValueError):
+        sweep("Step3", "B200", n_f=[0, 1])
+    with pytest.raises(ValueError):
+        sweep("Step3", "B200", n_f=[])
+
+
+# ---------------------------------------------------------------------------
+# CLI smoke
+# ---------------------------------------------------------------------------
+
+def _cli(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(ROOT, "src") + os.pathsep +
+                         env.get("PYTHONPATH", ""))
+    return subprocess.run([sys.executable, "-m", "repro", *args],
+                          capture_output=True, text=True, env=env,
+                          timeout=120)
+
+
+def test_cli_plan_json():
+    out = _cli("plan", "--model", "DeepSeek-V3", "--hardware", "H800",
+               "--json")
+    assert out.returncode == 0, out.stderr
+    doc = json.loads(out.stdout)
+    assert doc["plan"]["n_f"] >= 1
+    assert doc["verdict"]["model"] == "DeepSeek-V3"
+
+
+def test_cli_sweep_named_with_json(tmp_path):
+    path = tmp_path / "dz.json"
+    out = _cli("sweep", "--name", "dead-zone", "--json", str(path))
+    assert out.returncode == 0, out.stderr
+    assert "DeepSeek-V3,H800" in out.stdout
+    rows = json.loads(path.read_text())
+    assert len(rows) == 120                       # 1 model × 3 hw × 40 n_f
+
+
+def test_cli_bench_reports_exact_speedup():
+    out = _cli("bench", "--n-f-max", "24", "--repeat", "2")
+    assert out.returncode == 0, out.stderr
+    assert "bit_exact=True" in out.stdout
+
+
+def test_cli_plan_dense_model_fails_cleanly():
+    out = _cli("plan", "--model", "qwen3-8b", "--hardware", "H800")
+    assert out.returncode == 2
+    assert "planning failed" in out.stderr
+
+
+def test_cli_list():
+    out = _cli("list", "models")
+    assert out.returncode == 0 and "DeepSeek-V3" in out.stdout

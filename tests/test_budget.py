@@ -3,7 +3,7 @@
 import math
 
 import pytest
-from hypothesis import given, strategies as st
+from optional_hypothesis import given, strategies as st
 
 from repro.core import budget as bdg
 from repro.core.hardware import get_hardware

@@ -4,7 +4,7 @@ targets #1 and #2 from DESIGN.md §7."""
 import math
 
 import pytest
-from hypothesis import given, strategies as st
+from optional_hypothesis import given, strategies as st
 
 from repro.core import comm_roofline as cr
 from repro.core.budget import Scenario, stage_budget

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from optional_hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_prefill import flash_prefill_pallas
 

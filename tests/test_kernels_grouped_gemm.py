@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from optional_hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops as kops
 from repro.kernels.grouped_gemm import build_visits, grouped_gemm_pallas

@@ -13,6 +13,14 @@ import textwrap
 
 import pytest
 
+from repro import compat
+
+# The subprocess snippets below build meshes with jax ≥ 0.6 axis_types and
+# rely on ≥ 0.6 shard_map semantics across real shards; on 0.4.x they would
+# die with AttributeError inside the child process. Skip cleanly instead.
+pytestmark = pytest.mark.skipif(
+    not compat.HAS_MESH_AXIS_TYPES, reason=compat.JAX_06_SKIP_REASON)
+
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 
 

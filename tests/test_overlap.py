@@ -1,7 +1,7 @@
 """Overlap pipeline simulator (Table 2, Fig. 1b) — validation target #6."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from optional_hypothesis import given, settings, strategies as st
 
 from repro.core import overlap as ov
 

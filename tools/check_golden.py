@@ -1,0 +1,96 @@
+#!/usr/bin/env python
+"""Golden-diff gate for the benchmark suite.
+
+    python -m benchmarks.run --json current.json
+    python tools/check_golden.py current.json              # diff vs committed
+    python tools/check_golden.py current.json --update     # re-bless golden
+
+Timing-dependent fields are normalized out before diffing so the check is
+deterministic across machines and runs:
+  * the ``us_per_call`` column (wall-clock per call),
+  * derived keys ``gflops_rate``, ``slowdown``, ``max_logit_err`` (and
+    ``*_us`` keys) — measured rates / run-to-run float noise.
+Everything else — HFU values, regimes, verdicts, drop fractions, match
+flags — must be byte-identical to the committed golden
+(``benchmarks/golden.json``). Exit 1 on any difference.
+"""
+
+from __future__ import annotations
+
+import argparse
+import difflib
+import json
+import os
+import sys
+
+DEFAULT_GOLDEN = os.path.join(os.path.dirname(__file__), "..",
+                              "benchmarks", "golden.json")
+
+# Derived keys whose values are timing- or numerics-noise-dependent
+# (max_err: the capacity ablation drops different ties run-to-run on CPU).
+VOLATILE_KEYS = {"gflops_rate", "slowdown", "max_logit_err", "max_err"}
+
+
+def _volatile(key: str) -> bool:
+    return key in VOLATILE_KEYS or key.endswith("_us")
+
+
+def normalize(doc: dict) -> list:
+    """Canonical, timing-free text form of a run.py --json document."""
+    lines = []
+    for row in doc.get("rows", []):
+        derived = row.get("derived", {})
+        body = ";".join(
+            f"{k}=~" if _volatile(k) else f"{k}={derived[k]}"
+            for k in sorted(derived))
+        lines.append(f"{row['module']}::{row['name']},{body}")
+    lines.append(f"failures={doc.get('failures', 0)}")
+    return lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("current", help="JSON from python -m benchmarks.run --json")
+    ap.add_argument("--golden", default=DEFAULT_GOLDEN)
+    ap.add_argument("--update", action="store_true",
+                    help="overwrite the golden with the current run")
+    args = ap.parse_args(argv)
+
+    with open(args.current) as fh:
+        current = json.load(fh)
+
+    if args.update:
+        with open(args.golden, "w") as fh:
+            json.dump(current, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"golden updated: {args.golden} "
+              f"({len(current.get('rows', []))} rows)")
+        return 0
+
+    if not os.path.exists(args.golden):
+        print(f"no golden at {args.golden}; create one with --update",
+              file=sys.stderr)
+        return 1
+
+    with open(args.golden) as fh:
+        golden = json.load(fh)
+
+    cur_lines = normalize(current)
+    gold_lines = normalize(golden)
+    if cur_lines == gold_lines:
+        print(f"golden-diff clean: {len(cur_lines) - 1} rows match "
+              f"({os.path.relpath(args.golden)})")
+        return 0
+
+    diff = difflib.unified_diff(gold_lines, cur_lines,
+                                fromfile="golden", tofile="current",
+                                lineterm="")
+    for line in diff:
+        print(line)
+    print("\ngolden-diff FAILED — investigate, then re-bless with "
+          "tools/check_golden.py --update if intended", file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
