@@ -1,13 +1,17 @@
 """``python -m repro`` — the command-line front door.
 
 Subcommands:
-  plan   — run the §4 planner for one (model, hardware, scenario) triple.
-  sweep  — vectorized §3 grid (named sweep or explicit axes); JSON/CSV out.
-  bench  — scalar-loop vs vectorized-sweep equivalence + speedup check.
-  list   — registry contents (models, hardware, scenarios, sweeps).
+  plan          — run the §4 planner for one (model, hardware, scenario).
+  sweep         — vectorized §3 grid (named sweep or explicit axes).
+  bench         — scalar-loop vs vectorized-sweep equivalence + speedup.
+  serve-traffic — two-role AFD serving engine under a stochastic trace.
+  list          — registry contents (models, hardware, scenarios, sweeps,
+                  traffic profiles).
 
-Pure-analysis only: nothing here imports jax, so the CLI starts in
-milliseconds and runs anywhere.
+Analysis subcommands import no jax, so the CLI starts in milliseconds
+and runs anywhere; ``serve-traffic`` is the exception — it lowers a
+smoke-scale architecture onto the two-role AFD runtime (jax imported
+lazily inside the command).
 """
 
 from __future__ import annotations
@@ -63,6 +67,14 @@ def cmd_list(args) -> int:
             params = registry.named_sweep(s)
             print(f"  {s:12s} models={len(params['models'])} "
                   f"hardware={len(params['hardware'])}")
+    if kind in ("traffic", "all"):
+        from repro.serving import workload
+        print("traffic profiles:")
+        for name in workload.list_profiles():
+            prof = workload.get_profile(name)
+            print(f"  {name:14s} {prof.total_duration:4.1f}s "
+                  f"~{prof.expected_requests:5.0f} req  "
+                  f"{prof.description}")
     return 0
 
 
@@ -188,6 +200,122 @@ def _nan_mask(a: np.ndarray) -> np.ndarray:
     return (a != a) if a.dtype.kind == "f" else np.zeros(a.shape, bool)
 
 
+def cmd_serve_traffic(args) -> int:
+    import dataclasses
+
+    import jax                                     # lazy: jax-backed command
+
+    from repro import configs
+    from repro.api import registry
+    from repro.core import planner as pln
+    from repro.core.planner import PlanningError
+    from repro.models.model import make_model
+    from repro.parallel.afd import AFDRuntime, split_nodes
+    from repro.serving.afd_engine import AFDServeEngine, HFUProbe
+    from repro.serving.scheduler import SLOConfig, SLOScheduler
+    from repro.serving.workload import generate_trace, get_profile
+
+    profile = get_profile(args.profile)
+    cfg = configs.get_smoke_config(args.arch)
+    if not cfg.is_moe:
+        print(f"error: {args.arch} is dense — the two-role AFD engine "
+              "needs routed experts", file=sys.stderr)
+        return 2
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    devs = jax.devices()
+    if len(devs) >= 2:
+        half = len(devs) // 2
+        a_dev, f_dev = split_nodes(devs, half, len(devs) - half)
+    else:
+        a_dev = f_dev = [devs[0]]
+    rt = AFDRuntime(cfg, params, a_dev, f_dev)
+
+    spec = registry.spec_from_arch_config(cfg)
+    hw = registry.resolve_hardware(args.hardware)
+    try:
+        plan = pln.plan_afd(spec, hw)
+        probe = HFUProbe(model=spec, hardware=hw, plan=plan)
+    except PlanningError as e:
+        print(f"warning: no AFD plan for {args.arch} on {args.hardware} "
+              f"({e}); HFU probe disabled", file=sys.stderr)
+        plan, probe = None, None
+
+    scheduler = None
+    if args.policy != "off":
+        if args.policy == "afd" and plan is None:
+            print("error: --policy afd needs a feasible AFD plan",
+                  file=sys.stderr)
+            return 2
+        scheduler = SLOScheduler(SLOConfig(tpot=args.slo_tpot),
+                                 mode=args.policy, plan=plan)
+
+    tick_s = args.tick_ms * 1e-3 if args.tick_ms > 0 else None
+    eng = AFDServeEngine(
+        rt, max_len=args.max_len, n_bo=args.n_bo, mb_slots=args.mb_slots,
+        scheduler=scheduler, probe=probe, greedy=not args.sample,
+        seed=args.seed, slo_tpot=args.slo_tpot, slo_ttft=args.slo_ttft,
+        tick_seconds=tick_s, window_ticks=args.window_ticks)
+    trace = generate_trace(profile, seed=args.seed,
+                           max_requests=args.max_requests)
+
+    t0 = time.perf_counter()
+    windows = eng.run(trace, max_ticks=args.max_ticks)
+    wall = time.perf_counter() - t0
+    summary = eng.summary()
+    summary["wall_s"] = wall
+
+    doc = {"profile": profile.name, "arch": args.arch, "seed": args.seed,
+           "windows": [dataclasses.asdict(w) for w in windows],
+           "summary": summary}
+    if args.json:
+        payload = json.dumps(doc, indent=2, sort_keys=True, default=float)
+        if args.json == "-":
+            print(payload)
+        else:
+            with open(args.json, "w") as fh:
+                fh.write(payload + "\n")
+    if args.json != "-":
+        print(f"# {profile.name} seed={args.seed}: {len(trace)} arrivals, "
+              f"{summary['decode_ticks']} ticks, "
+              f"{len(windows)} windows, wall {wall:.1f}s")
+        hdr = ("win  t[s]        ticks adm done goodput_rps ttft_p95 "
+               "bytes_ok")
+        if scheduler is not None:
+            hdr += "  sigma alpha"
+        if probe is not None:
+            hdr += "  hfu_meas/pred"
+        print(hdr)
+        for w in windows:
+            line = (f"{w.window:3d}  {w.t_start:5.2f}-{w.t_end:5.2f} "
+                    f"{w.ticks:5d} {w.admitted:3d} {w.completed:4d} "
+                    f"{w.goodput_rps:11.2f} "
+                    + (f"{w.ttft_p95:8.3f} " if w.ttft_p95 is not None
+                       else "       - ")
+                    + f"{str(w.bytes_match):>8s}")
+            if scheduler is not None:
+                line += (f"  {w.sigma:5.2f} {w.alpha:5.2f}"
+                         if w.sigma is not None else "      -     -")
+            if probe is not None and w.hfu_measured is not None:
+                line += (f"  {w.hfu_measured:.2e}/"
+                         f"{w.hfu_predicted:.2e}")
+            print(line)
+        print(f"summary: completed={summary['completed']}"
+              f"/{summary['arrivals']}  "
+              f"goodput={summary['goodput_rps']:.2f} req/s  "
+              f"slo_ok={summary['slo_ok_frac']}  "
+              f"bytes_match_all={summary['bytes_match_all']}")
+        if "hfu_measured_mean" in summary:
+            print(f"hfu: measured_mean={summary['hfu_measured_mean']:.3e}  "
+                  f"predicted={summary['hfu_predicted']:.3e}  "
+                  f"b_rank_util={summary['b_rank_utilization_mean']:.3e}")
+    if not summary["bytes_match_all"]:
+        print("FAIL: measured M2N bytes diverged from the Eq. 9/17 "
+              "prediction", file=sys.stderr)
+        return 1
+    return 0
+
+
 def build_parser() -> argparse.ArgumentParser:
     p = argparse.ArgumentParser(
         prog="python -m repro",
@@ -230,10 +358,40 @@ def build_parser() -> argparse.ArgumentParser:
     be.add_argument("--repeat", type=int, default=3)
     be.set_defaults(fn=cmd_bench)
 
+    st = sub.add_parser(
+        "serve-traffic",
+        help="two-role AFD serving engine under a stochastic trace")
+    st.add_argument("--profile", required=True,
+                    help="traffic profile (see: python -m repro list traffic)")
+    st.add_argument("--arch", default="granite-moe-1b-a400m",
+                    help="smoke architecture to serve (MoE only)")
+    st.add_argument("--hardware", default="H800",
+                    help="hardware spec for the live Eq. 9/HFU probe")
+    st.add_argument("--seed", type=int, default=0)
+    st.add_argument("--max-requests", type=int, default=None)
+    st.add_argument("--max-ticks", type=int, default=5000)
+    st.add_argument("--max-len", type=int, default=32)
+    st.add_argument("--n-bo", type=int, default=2,
+                    help="micro-batches in the 3BO rotation")
+    st.add_argument("--mb-slots", type=int, default=2,
+                    help="sequences per micro-batch")
+    st.add_argument("--window-ticks", type=int, default=8)
+    st.add_argument("--tick-ms", type=float, default=10.0,
+                    help="virtual decode-tick duration; 0 = wall clock")
+    st.add_argument("--policy", default="ep", choices=["ep", "afd", "off"],
+                    help="§3.3 SLO scheduler mode throttling admission")
+    st.add_argument("--slo-tpot", type=float, default=0.05)
+    st.add_argument("--slo-ttft", type=float, default=1.0)
+    st.add_argument("--sample", action="store_true",
+                    help="sample instead of greedy decode (seeded)")
+    st.add_argument("--json", default=None, metavar="PATH",
+                    help="write windows+summary JSON ('-' for stdout)")
+    st.set_defaults(fn=cmd_serve_traffic)
+
     ls = sub.add_parser("list", help="registry contents")
     ls.add_argument("kind", nargs="?", default="all",
                     choices=["all", "models", "hardware", "scenarios",
-                             "sweeps"])
+                             "sweeps", "traffic"])
     ls.set_defaults(fn=cmd_list)
     return p
 

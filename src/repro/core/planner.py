@@ -194,6 +194,65 @@ def elastic_rescale(plan: AFDPlan, sigma: float) -> RescaleDecision:
         alpha=alpha, alpha_ep_reference=imb.alpha_ep(sigma, plan.lambda_afd))
 
 
+# ---------------------------------------------------------------------------
+# Live measurement ↔ prediction (the serving engines check the paper's
+# analytics against what the two-role runtime actually did)
+# ---------------------------------------------------------------------------
+
+def predict_m2n_cycle_bytes(n_tokens: int, hidden: int, top_k: int,
+                            dtype_bytes: int = 4, gate_bytes: int = 4,
+                            idx_bytes: int = 4) -> tuple:
+    """(dispatch, combine) bytes of ONE M2N cycle at the engine's dtypes.
+
+    The Eq. 17 wire model evaluated at what the runtime actually ships:
+    per cycle ``n_tokens`` hidden vectors each way plus the gating metadata
+    (top-k weights + indices) on the dispatch leg. Must stay in lockstep
+    with ``parallel.afd.AFDStats.record`` — the serving engine asserts the
+    measured counters match this prediction *exactly* per window.
+    """
+    payload = n_tokens * hidden * dtype_bytes
+    meta = n_tokens * top_k * (gate_bytes + idx_bytes)
+    return payload + meta, payload
+
+
+@dataclasses.dataclass(frozen=True)
+class LiveHFU:
+    """Measured FFN-stage operating point vs the Eq. 9 plan, per window."""
+    window_s: float
+    tokens_routed: float          # tokens through one MoE stage this window
+    tokens_per_rank_per_tb: float # measured inflow in Eq. 9's units
+    b_rank_predicted: float       # the plan's Eq. 9 cap
+    utilization: float            # measured inflow / Eq. 9 cap
+    hfu_measured: float           # Eqs. 6–8 at the measured inflow
+    hfu_predicted: float          # the plan's HFU at the Eq. 9 inflow
+
+
+def live_hfu(model: MoEModelSpec, hw: HardwareSpec, plan: AFDPlan,
+             tokens_routed: float, window_s: float,
+             scen: Optional[bdg.Scenario] = None) -> LiveHFU:
+    """Price a measured serving window against the plan's Eq. 9 prediction.
+
+    Converts the window's routed-token count into Eq. 9 units (tokens per
+    FFN rank per stage budget t_B) and re-evaluates the §3.2 HFU chain at
+    that *measured* inflow (via the ``b_cap`` mechanism, which caps Eq. 9 at
+    the observed operating point). ``hfu_measured ≤ hfu_predicted`` always:
+    the Eq. 9 cap is an upper bound, so a live engine can only surface the
+    dead zone, never escape it.
+    """
+    scen = scen or bdg.Scenario()
+    if window_s <= 0:
+        raise PlanningError(f"window must be positive, got {window_s}")
+    ranks = plan.n_f * hw.gpus_per_node
+    tb_windows = window_s / plan.t_budget
+    per_rank = tokens_routed / tb_windows / ranks
+    measured = hb.hfu_point(model, hw, plan.n_f, scen, b_cap=per_rank)
+    return LiveHFU(
+        window_s=window_s, tokens_routed=tokens_routed,
+        tokens_per_rank_per_tb=per_rank, b_rank_predicted=plan.b_rank,
+        utilization=per_rank / plan.b_rank if plan.b_rank else 0.0,
+        hfu_measured=measured.hfu, hfu_predicted=plan.hfu)
+
+
 @dataclasses.dataclass(frozen=True)
 class Verdict:
     """§4 Table 3 as a computed recommendation."""

@@ -90,15 +90,31 @@ def split_roles(params, cfg: ArchConfig):
 
 @dataclasses.dataclass
 class AFDStats:
+    """M2N wire counters. ``snapshot()``/``since()`` give the serving
+    engine per-window deltas to diff against the planner's Eq. 9/17 wire
+    prediction (``core.planner.predict_m2n_cycle_bytes``) live."""
     dispatch_bytes: int = 0
     combine_bytes: int = 0
     dispatches: int = 0
+    tokens_routed: int = 0
 
     def record(self, n_tokens: int, hidden: int, dtype_bytes: int,
                meta_bytes: int) -> None:
         self.dispatch_bytes += n_tokens * hidden * dtype_bytes + meta_bytes
         self.combine_bytes += n_tokens * hidden * dtype_bytes
         self.dispatches += 1
+        self.tokens_routed += n_tokens
+
+    def snapshot(self) -> "AFDStats":
+        return dataclasses.replace(self)
+
+    def since(self, prev: "AFDStats") -> "AFDStats":
+        """Counter deltas accumulated after ``prev = stats.snapshot()``."""
+        return AFDStats(
+            dispatch_bytes=self.dispatch_bytes - prev.dispatch_bytes,
+            combine_bytes=self.combine_bytes - prev.combine_bytes,
+            dispatches=self.dispatches - prev.dispatches,
+            tokens_routed=self.tokens_routed - prev.tokens_routed)
 
 
 class AFDRuntime:

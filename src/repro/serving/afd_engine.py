@@ -1,0 +1,486 @@
+"""Two-role AFD continuous-batching engine under open-loop traffic.
+
+This is the fusion of the repo's two serving worlds: the lock-step
+continuous-batching semantics of ``serving.engine`` and the two-role M2N
+runtime of ``parallel.afd``. The decode tick drives ``decode_step_3bo``
+micro-batch rotation — ``n_bo`` micro-batches of ``mb_slots`` sequences
+each rotate through the A-role attention / dispatch / F-role expert FFN /
+combine cycle — fed by a ``serving.workload`` open-loop trace (Poisson
+arrivals, bursts, ramps) instead of a closed request list.
+
+Three live measurements per window, checked against the paper's analytics
+*as they happen* rather than in an offline sweep:
+
+  * **SLO metrics** — goodput (requests and tokens meeting the TPOT/TTFT
+    SLOs), TTFT p50/p95, mean TPOT, queue depth.
+  * **Wire bytes** — the AFD runtime's measured dispatch/combine counters
+    diffed against the planner's Eq. 9/17 wire model
+    (``core.planner.predict_m2n_cycle_bytes``); the engine asserts they
+    match *exactly* — any drift means the byte accounting and the paper's
+    B_rank analysis have diverged.
+  * **HFU** — the measured routed-token inflow converted to Eq. 9 units
+    and re-priced through the §3.2 HFU chain (``core.planner.live_hfu``),
+    surfacing the dead zone as a runtime observation: measured HFU can
+    approach but never exceed the plan's Eq. 9 cap.
+
+The §3.3 policy loop is live: an ``SLOScheduler`` observes per-tick stage
+latencies, estimates σ, and its per-window decision (EP batch shrink or
+AFD discrete N_A rescale) throttles admission; decisions are recorded in
+the window stream so the α/α_other deficit (Eqs. 12/16) is observable.
+
+The clock is *virtual* and deterministic by default (fixed tick duration,
+optionally an injected latency stream for jitter experiments); pass
+``tick_seconds=None`` to use wall-clock time on real hardware.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Deque, Dict, List, Optional, Sequence
+
+import collections
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import budget as bdg
+from repro.core import planner as pln
+from repro.core.hardware import HardwareSpec
+from repro.core.modelspec import MoEModelSpec
+from repro.parallel.afd import AFDRuntime
+from repro.serving.engine import PAD, splice_batch_slot
+from repro.serving.scheduler import SLOScheduler
+from repro.serving.workload import ArrivalEvent
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One in-flight request under the virtual clock."""
+    rid: int
+    prompt: np.ndarray                  # (S,) int32
+    max_new_tokens: int
+    t_arrive: float
+    t_first: float = -1.0               # first token emitted (TTFT end)
+    t_done: float = -1.0
+    output: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.output) >= self.max_new_tokens
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first - self.t_arrive
+
+    @property
+    def tpot(self) -> float:
+        n_decode = len(self.output) - 1
+        if n_decode <= 0:
+            return 0.0
+        return (self.t_done - self.t_first) / n_decode
+
+
+@dataclasses.dataclass
+class _MicroBatch:
+    caches: list                        # per-layer AFD caches
+    pos: object                         # (mb_slots,) int32
+    tokens: np.ndarray                  # (mb_slots,) int32 next feed
+    slots: List[Optional[ServeRequest]]
+
+    def live(self) -> List[int]:
+        return [i for i, r in enumerate(self.slots) if r is not None]
+
+
+@dataclasses.dataclass(frozen=True)
+class HFUProbe:
+    """Binds the live engine to one planner prediction (Eq. 9 / §3.2)."""
+    model: MoEModelSpec
+    hardware: HardwareSpec
+    plan: pln.AFDPlan
+    scenario: bdg.Scenario = dataclasses.field(default_factory=bdg.Scenario)
+
+    def window(self, tokens_routed: float, window_s: float) -> pln.LiveHFU:
+        return pln.live_hfu(self.model, self.hardware, self.plan,
+                            tokens_routed, window_s, self.scenario)
+
+
+@dataclasses.dataclass
+class WindowRecord:
+    """Per-window serving observables (flat, JSON-ready)."""
+    window: int
+    t_start: float
+    t_end: float
+    ticks: int
+    arrivals: int
+    admitted: int
+    completed: int
+    tokens_out: int
+    queue_len: int
+    live: int
+    ttft_p50: Optional[float]
+    ttft_p95: Optional[float]
+    tpot_mean: Optional[float]
+    goodput_rps: float                  # SLO-compliant requests/s
+    goodput_tps: float                  # SLO-compliant tokens/s
+    slo_ok_frac: Optional[float]
+    # measured vs predicted wire traffic (must match exactly)
+    dispatch_bytes: int
+    combine_bytes: int
+    predicted_dispatch_bytes: int
+    predicted_combine_bytes: int
+    bytes_match: bool
+    tokens_routed: int                  # per-MoE-stage tokens this window
+    # §3.3 policy loop
+    sigma: Optional[float] = None
+    straggler_rate: Optional[float] = None
+    alpha: Optional[float] = None
+    alpha_other: Optional[float] = None
+    policy_mode: Optional[str] = None
+    n_a: Optional[int] = None
+    live_cap: Optional[int] = None
+    # live Eq. 9 / HFU comparison
+    hfu_measured: Optional[float] = None
+    hfu_predicted: Optional[float] = None
+    b_rank_utilization: Optional[float] = None
+
+
+@dataclasses.dataclass
+class ServeStats:
+    decode_ticks: int = 0
+    prefills: int = 0
+    tokens_out: int = 0
+    arrivals: int = 0
+    completed: int = 0
+
+
+class AFDServeEngine:
+    """Two-role continuous batching over ``n_bo × mb_slots`` sequences."""
+
+    def __init__(self, runtime: AFDRuntime, *, max_len: int = 32,
+                 n_bo: int = 2, mb_slots: int = 2,
+                 scheduler: Optional[SLOScheduler] = None,
+                 probe: Optional[HFUProbe] = None,
+                 greedy: bool = True, seed: int = 0,
+                 slo_tpot: float = 0.05, slo_ttft: float = 1.0,
+                 tick_seconds: Optional[float] = 0.05,
+                 tick_latencies: Optional[Sequence[float]] = None,
+                 window_ticks: int = 8):
+        if n_bo < 1 or mb_slots < 1:
+            raise ValueError("need n_bo ≥ 1 and mb_slots ≥ 1")
+        self.rt = runtime
+        self.cfg = runtime.cfg
+        self.max_len = max_len
+        self.n_bo = n_bo
+        self.mb_slots = mb_slots
+        self.total_slots = n_bo * mb_slots
+        self.scheduler = scheduler
+        self.probe = probe
+        self.greedy = greedy
+        self.rng = np.random.RandomState(seed)
+        self.slo_tpot = slo_tpot
+        self.slo_ttft = slo_ttft
+        self.tick_seconds = tick_seconds
+        self._latencies = list(tick_latencies) if tick_latencies else None
+        self._lat_i = 0
+        self.window_ticks = window_ticks
+
+        self.mbs = [self._fresh_mb() for _ in range(n_bo)]
+        self.queue: Deque[ServeRequest] = collections.deque()
+        self.trace: Deque[ArrivalEvent] = collections.deque()
+        self.now = 0.0
+        self.stats = ServeStats()
+        self.windows: List[WindowRecord] = []
+        self.completed: List[ServeRequest] = []
+        self.decisions: List = []
+        self._live_cap = self.total_slots
+
+        self._moe_layers = sum(1 for s in runtime.specs if s.moe)
+        self._dtype_bytes = int(np.dtype(self.cfg.compute_dtype).itemsize)
+        self._open_window()
+
+    # ---- plumbing ----------------------------------------------------------
+
+    def _fresh_mb(self) -> _MicroBatch:
+        caches, pos = self.rt.init_cache(self.mb_slots, self.max_len)
+        return _MicroBatch(caches=caches, pos=pos,
+                           tokens=np.full((self.mb_slots,), PAD, np.int32),
+                           slots=[None] * self.mb_slots)
+
+    def _select(self, logits_row) -> int:
+        if self.greedy:
+            return int(jnp.argmax(logits_row))
+        p = np.asarray(jnp.asarray(logits_row).astype(jnp.float32))
+        p = np.exp(p - p.max())
+        p /= p.sum()
+        return int(self.rng.choice(p.shape[0], p=p))
+
+    def live_count(self) -> int:
+        return sum(len(mb.live()) for mb in self.mbs)
+
+    def _tick_duration(self, wall0: float) -> float:
+        if self._latencies is not None:
+            dt = self._latencies[self._lat_i % len(self._latencies)]
+            self._lat_i += 1
+            return float(dt)
+        if self.tick_seconds is not None:
+            return self.tick_seconds
+        return max(time.perf_counter() - wall0, 1e-9)
+
+    # ---- windows -----------------------------------------------------------
+
+    def _open_window(self) -> None:
+        self._w_t0 = self.now
+        self._w_ticks = 0
+        self._w_arrivals = 0
+        self._w_admitted = 0
+        self._w_completed: List[ServeRequest] = []
+        self._w_tokens_out = 0
+        self._w_prefill_tokens = 0
+        self._w_bytes0 = self.rt.stats.snapshot()
+
+    def _close_window(self) -> None:
+        delta = self.rt.stats.since(self._w_bytes0)
+        cyc_d, cyc_c = pln.predict_m2n_cycle_bytes(
+            self.mb_slots, self.cfg.d_model, self.cfg.top_k,
+            dtype_bytes=self._dtype_bytes)
+        pf_d, pf_c = pln.predict_m2n_cycle_bytes(
+            1, self.cfg.d_model, self.cfg.top_k,
+            dtype_bytes=self._dtype_bytes)
+        decode_cycles = self._w_ticks * self.n_bo * self._moe_layers
+        prefill_cycles = self._w_prefill_tokens * self._moe_layers
+        pred_dispatch = decode_cycles * cyc_d + prefill_cycles * pf_d
+        pred_combine = decode_cycles * cyc_c + prefill_cycles * pf_c
+
+        dur = max(self.now - self._w_t0, 1e-12)
+        done = self._w_completed
+        ttfts = sorted(r.ttft for r in done)
+        ok = [r for r in done
+              if r.tpot <= self.slo_tpot * (1 + 1e-9)
+              and r.ttft <= self.slo_ttft * (1 + 1e-9)]
+        rec = WindowRecord(
+            window=len(self.windows), t_start=self._w_t0, t_end=self.now,
+            ticks=self._w_ticks, arrivals=self._w_arrivals,
+            admitted=self._w_admitted, completed=len(done),
+            tokens_out=self._w_tokens_out, queue_len=len(self.queue),
+            live=self.live_count(),
+            ttft_p50=(float(np.percentile(ttfts, 50)) if ttfts else None),
+            ttft_p95=(float(np.percentile(ttfts, 95)) if ttfts else None),
+            tpot_mean=(float(np.mean([r.tpot for r in done]))
+                       if done else None),
+            goodput_rps=len(ok) / dur,
+            goodput_tps=sum(len(r.output) for r in ok) / dur,
+            slo_ok_frac=(len(ok) / len(done) if done else None),
+            dispatch_bytes=delta.dispatch_bytes,
+            combine_bytes=delta.combine_bytes,
+            predicted_dispatch_bytes=pred_dispatch,
+            predicted_combine_bytes=pred_combine,
+            bytes_match=(delta.dispatch_bytes == pred_dispatch
+                         and delta.combine_bytes == pred_combine),
+            tokens_routed=(delta.tokens_routed // self._moe_layers
+                           if self._moe_layers else 0),
+        )
+        if self.scheduler is not None:
+            d = self.scheduler.decide(self._policy_budget())
+            self.decisions.append(d)
+            scale = d.batch_scale
+            self._live_cap = max(1, int(math.floor(
+                self.total_slots * scale + 1e-9)))
+            rec.sigma = d.sigma
+            rec.straggler_rate = d.straggler_rate
+            rec.alpha = d.alpha
+            rec.alpha_other = d.alpha_other
+            rec.policy_mode = d.mode
+            rec.n_a = d.n_a
+            rec.live_cap = self._live_cap
+        if self.probe is not None and self._moe_layers:
+            lh = self.probe.window(rec.tokens_routed, dur)
+            rec.hfu_measured = lh.hfu_measured
+            rec.hfu_predicted = lh.hfu_predicted
+            rec.b_rank_utilization = lh.utilization
+        self.windows.append(rec)
+        self._open_window()
+
+    def _policy_budget(self) -> float:
+        """Per-tick latency budget the §3.3 loop compares p95 against."""
+        if self.tick_seconds is not None:
+            return self.tick_seconds
+        return self.slo_tpot
+
+    # ---- admission ---------------------------------------------------------
+
+    def submit(self, event: ArrivalEvent) -> None:
+        """Open-loop arrival (usually fed from the trace by ``run``)."""
+        self.queue.append(ServeRequest(
+            rid=event.rid,
+            prompt=self._make_prompt(event),
+            max_new_tokens=event.max_new_tokens,
+            t_arrive=event.t,
+        ))
+        self.stats.arrivals += 1
+        self._w_arrivals += 1
+
+    def _make_prompt(self, event: ArrivalEvent) -> np.ndarray:
+        """Deterministic per-request prompt tokens (content is irrelevant
+        to the serving metrics; derived from rid so traces replay exactly)."""
+        base = np.arange(event.prompt_len, dtype=np.int64)
+        toks = (base * 131 + event.rid * 31 + 7) \
+            % max(self.cfg.vocab_size - 1, 1) + 1
+        return toks.astype(np.int32)
+
+    def _drain_arrivals(self) -> None:
+        while self.trace and self.trace[0].t <= self.now + 1e-12:
+            self.submit(self.trace.popleft())
+
+    def _prefill_single(self, req: ServeRequest):
+        """Teacher-force the prompt through the two-role decode path.
+
+        The AFD runtime has no batched prefill program; the prompt streams
+        token-by-token through the same M2N cycle, so prefill traffic lands
+        in the byte accounting like any other dispatch — and costs one tick
+        of virtual time per prompt token, which is literally what this
+        implementation spends. Returns the populated 1-sequence caches,
+        final pos, and the first output token.
+        """
+        wall0 = time.perf_counter()
+        caches, pos = self.rt.init_cache(1, self.max_len)
+        logits = None
+        for tok in req.prompt:
+            logits, caches, pos = self.rt.decode_step(
+                jnp.asarray([tok], jnp.int32), caches, pos)
+        self._w_prefill_tokens += len(req.prompt)
+        if self._latencies is not None or self.tick_seconds is not None:
+            base = (self.tick_seconds if self.tick_seconds is not None
+                    else self._latencies[0])
+            self.now += len(req.prompt) * base
+        else:
+            self.now += max(time.perf_counter() - wall0, 1e-9)
+        first = self._select(logits[0])
+        return caches, pos, first
+
+    def _admit(self) -> None:
+        for mb in self.mbs:
+            for slot in range(self.mb_slots):
+                if not self.queue or self.live_count() >= self._live_cap:
+                    return
+                if mb.slots[slot] is not None:
+                    continue
+                req = self.queue.popleft()
+                caches1, _, first = self._prefill_single(req)
+                for li in range(len(mb.caches)):
+                    mb.caches[li] = splice_batch_slot(
+                        mb.caches[li], caches1[li], slot, self.mb_slots)
+                mb.pos = mb.pos.at[slot].set(len(req.prompt))
+                req.output.append(first)
+                mb.slots[slot] = req
+                mb.tokens[slot] = first
+                self.stats.prefills += 1
+                self.stats.tokens_out += 1
+                self._w_tokens_out += 1
+                self._w_admitted += 1
+                req.t_first = self.now   # first token exists after prefill
+
+    # ---- the decode tick ---------------------------------------------------
+
+    def tick(self) -> int:
+        """One 3BO rotation over every micro-batch. Returns live count."""
+        self._drain_arrivals()
+        self._admit()
+        live = self.live_count()
+        if live == 0:
+            return 0
+
+        wall0 = time.perf_counter()
+        outs = self.rt.decode_step_3bo(
+            [(jnp.asarray(mb.tokens), mb.caches, mb.pos)
+             for mb in self.mbs], n_bo=self.n_bo)
+
+        dt = self._tick_duration(wall0)
+        self.now += dt
+        if self.scheduler is not None:
+            self.scheduler.observe(dt)
+
+        for mb, (logits, caches, pos) in zip(self.mbs, outs):
+            mb.caches, mb.pos = caches, pos
+            nxt = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
+            for i in mb.live():
+                req = mb.slots[i]
+                tok = int(nxt[i]) if self.greedy else self._select(logits[i])
+                req.output.append(tok)
+                mb.tokens[i] = tok
+                self.stats.tokens_out += 1
+                self._w_tokens_out += 1
+                if req.done or int(mb.pos[i]) >= self.max_len - 1:
+                    req.t_done = self.now
+                    self.completed.append(req)
+                    self._w_completed.append(req)
+                    self.stats.completed += 1
+                    mb.slots[i] = None
+                    mb.tokens[i] = PAD
+                    mb.pos = mb.pos.at[i].set(0)
+
+        self.stats.decode_ticks += 1
+        self._w_ticks += 1
+        if self._w_ticks >= self.window_ticks:
+            self._close_window()
+        return live
+
+    # ---- the serve loop ----------------------------------------------------
+
+    def run(self, trace: Sequence[ArrivalEvent],
+            max_ticks: int = 100_000) -> List[WindowRecord]:
+        """Serve an open-loop trace to completion (or ``max_ticks``)."""
+        self.trace = collections.deque(sorted(trace, key=lambda e: e.t))
+        while self.stats.decode_ticks < max_ticks:
+            if (not self.trace and not self.queue
+                    and self.live_count() == 0):
+                break
+            if (self.live_count() == 0 and not self.queue and self.trace):
+                # idle: fast-forward the virtual clock to the next arrival
+                self.now = max(self.now, self.trace[0].t)
+                self._drain_arrivals()
+                continue
+            self.tick()
+        if self._w_ticks:
+            self._close_window()
+        return self.windows
+
+    # ---- summaries ---------------------------------------------------------
+
+    def summary(self) -> Dict[str, object]:
+        done = self.completed
+        ttfts = sorted(r.ttft for r in done)
+        ok = [r for r in done
+              if r.tpot <= self.slo_tpot * (1 + 1e-9)
+              and r.ttft <= self.slo_ttft * (1 + 1e-9)]
+        dur = max(self.now, 1e-12)
+        out: Dict[str, object] = {
+            "arrivals": self.stats.arrivals,
+            "completed": self.stats.completed,
+            "decode_ticks": self.stats.decode_ticks,
+            "prefills": self.stats.prefills,
+            "tokens_out": self.stats.tokens_out,
+            "duration_s": self.now,
+            "throughput_tps": self.stats.tokens_out / dur,
+            "goodput_rps": len(ok) / dur,
+            "goodput_tps": sum(len(r.output) for r in ok) / dur,
+            "slo_ok_frac": (len(ok) / len(done)) if done else None,
+            "ttft_p50": float(np.percentile(ttfts, 50)) if ttfts else None,
+            "ttft_p95": float(np.percentile(ttfts, 95)) if ttfts else None,
+            "tpot_mean": (float(np.mean([r.tpot for r in done]))
+                          if done else None),
+            "windows": len(self.windows),
+            "bytes_match_all": all(w.bytes_match for w in self.windows),
+            "dispatch_bytes": self.rt.stats.dispatch_bytes,
+            "combine_bytes": self.rt.stats.combine_bytes,
+        }
+        if self.probe is not None and self.windows:
+            busy = [w for w in self.windows if w.tokens_routed]
+            if busy:
+                out["hfu_measured_mean"] = float(np.mean(
+                    [w.hfu_measured for w in busy]))
+                out["hfu_predicted"] = busy[0].hfu_predicted
+                out["b_rank_utilization_mean"] = float(np.mean(
+                    [w.b_rank_utilization for w in busy]))
+        return out

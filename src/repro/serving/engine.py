@@ -6,15 +6,19 @@ the program; dead slots carry a pad token and are masked out). Requests
 arrive in a queue; a freed slot triggers a single-sequence prefill whose
 cache is spliced into the batch cache at the slot index.
 
-Fault tolerance: ``simulate_failure`` marks a fraction of the fleet dead
-and triggers a re-plan through the AFD planner's discrete rescale
-(§3.3 as a live policy); in-flight requests drain and re-queue.
+Fault tolerance: ``simulate_failure(frac)`` drains the ``ceil(frac ·
+n_slots)`` batch slots that stand in for the failed fraction of the fleet
+— their in-flight requests re-queue (keeping their original arrival and
+start timestamps so TTFT accounting spans the outage) and only their cache
+positions are zeroed — then triggers a re-plan through the AFD planner's
+discrete rescale (§3.3 as a live policy).
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 import time
 from typing import Callable, Deque, Dict, List, Optional, Tuple
 
@@ -26,6 +30,33 @@ from repro.models.common import ArchConfig
 from repro.models.model import Model
 
 PAD = 0
+
+
+def splice_batch_slot(dst_tree, src_tree, slot: int, n_slots: int):
+    """Write a 1-sequence cache pytree into batch position ``slot``.
+
+    The batch axis is identified explicitly: the axis where ``dst`` has
+    size ``n_slots``, ``src`` has size 1, and every other dimension agrees.
+    Matching on whole-shape inequality is wrong at ``n_slots == 1`` (the
+    two shapes coincide and the splice silently becomes a no-op, leaving
+    decode running on a stale/zero cache).
+    """
+    def splice(dst, src):
+        if dst.ndim == 0:
+            return dst
+        for ax in range(dst.ndim):
+            rest_dst = dst.shape[:ax] + dst.shape[ax + 1:]
+            rest_src = src.shape[:ax] + src.shape[ax + 1:]
+            if (dst.shape[ax] == n_slots and src.shape[ax] == 1
+                    and rest_dst == rest_src):
+                idx = [slice(None)] * dst.ndim
+                idx[ax] = slot
+                src_idx = [slice(None)] * src.ndim
+                src_idx[ax] = 0
+                return dst.at[tuple(idx)].set(
+                    src[tuple(src_idx)].astype(dst.dtype))
+        return dst
+    return jax.tree_util.tree_map(splice, dst_tree, src_tree)
 
 
 @dataclasses.dataclass
@@ -86,37 +117,34 @@ class DecodeEngine:
 
     def _splice_cache(self, slot: int, single_cache) -> None:
         """Insert a 1-sequence prefill cache into batch position ``slot``."""
-        def splice(dst, src):
-            if dst.ndim == 0 or dst.shape == src.shape:
-                return dst
-            # caches under 'stack' carry a leading period axis; the batch
-            # dim is the first axis whose size equals n_slots where src has 1
-            for ax in range(dst.ndim):
-                if dst.shape[ax] == self.n_slots and src.shape[ax] == 1:
-                    idx = [slice(None)] * dst.ndim
-                    idx[ax] = slot
-                    src_idx = [slice(None)] * src.ndim
-                    src_idx[ax] = 0
-                    return dst.at[tuple(idx)].set(src[tuple(src_idx)])
-            return dst
-        self.cache = jax.tree_util.tree_map(splice, self.cache, single_cache)
+        self.cache = splice_batch_slot(self.cache, single_cache, slot,
+                                       self.n_slots)
+
+    def _select(self, logits_row) -> int:
+        """Greedy or seeded-softmax token selection (shared by prefill and
+        the decode tick, so ``greedy=False`` applies to every token)."""
+        if self.greedy:
+            return int(jnp.argmax(logits_row))
+        p = np.asarray(jax.nn.softmax(
+            jnp.asarray(logits_row).astype(jnp.float32)))
+        return int(self.rng.choice(p.shape[0], p=p / p.sum()))
 
     def _admit(self) -> None:
         for slot in range(self.n_slots):
             if self.slots[slot] is not None or not self.queue:
                 continue
             req = self.queue.popleft()
-            req.started = time.time()
+            if req.started == 0.0:       # re-admissions keep the original
+                req.started = time.time()    # timestamp: TTFT spans outages
             batch = {"tokens": jnp.asarray(req.prompt[None, :])}
             logits, cache1 = self._prefill(self.params, batch)
             self._splice_cache(slot, cache1)
-            first = int(jnp.argmax(logits[0])) if self.greedy else \
-                int(self.rng.choice(self.cfg.vocab_size,
-                                    p=np.asarray(jax.nn.softmax(logits[0]))))
+            first = self._select(logits[0])
             req.output.append(first)
             self.slots[slot] = req
             self.cur_tokens[slot] = first
             self.stats.prefills += 1
+            self.stats.tokens_out += 1   # the prefill-produced first token
 
     # ---- the decode tick -------------------------------------------------------
 
@@ -129,6 +157,9 @@ class DecodeEngine:
         tokens = jnp.asarray(self.cur_tokens)
         logits, self.cache = self._decode(self.params, self.cache, tokens)
         nxt = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
+        if not self.greedy:
+            for i in live:
+                nxt[i] = self._select(logits[i])
         for i in live:
             req = self.slots[i]
             req.output.append(int(nxt[i]))
@@ -150,23 +181,34 @@ class DecodeEngine:
     def simulate_failure(self, frac_nodes_lost: float,
                          replan: Optional[Callable[[float], None]] = None
                          ) -> int:
-        """Drain in-flight requests back to the queue and re-plan.
+        """Fail ``frac_nodes_lost`` of capacity: drain the affected slots.
 
-        Returns the number of requeued requests. ``replan`` receives the
-        surviving-capacity fraction (the scheduler hooks the AFD planner's
-        discrete rescale here).
+        ``ceil(frac · n_slots)`` slots (the lowest indices stand in for the
+        failed nodes) drain their in-flight requests back to the queue for
+        a fresh generation attempt; surviving slots keep decoding. Drained
+        requests keep their original ``arrived``/``started`` timestamps so
+        TTFT accounting spans the outage. Returns the number of requeued
+        requests. ``replan`` receives the surviving-capacity fraction (the
+        scheduler hooks the AFD planner's discrete rescale here).
         """
+        if not 0.0 <= frac_nodes_lost <= 1.0:
+            raise ValueError(
+                f"frac_nodes_lost must be in [0, 1], got {frac_nodes_lost}")
+        n_drain = min(self.n_slots,
+                      math.ceil(frac_nodes_lost * self.n_slots - 1e-12))
         requeued = 0
-        for i, req in enumerate(self.slots):
-            if req is None:
-                continue
-            req.output.clear()           # restart generation after recovery
-            self.queue.appendleft(req)
-            self.slots[i] = None
-            requeued += 1
-        # caches for the drained slots are stale; zero the position so the
-        # next admit overwrites them
-        self.cache["pos"] = jnp.zeros_like(self.cache["pos"])
+        for i in range(n_drain):
+            req = self.slots[i]
+            if req is not None:
+                req.output.clear()       # restart generation after recovery
+                self.queue.appendleft(req)
+                self.slots[i] = None
+                requeued += 1
+        if n_drain:
+            # only the drained slots' caches are stale; zero their positions
+            # so the next admit overwrites them — survivors keep decoding.
+            drained = jnp.arange(n_drain)
+            self.cache["pos"] = self.cache["pos"].at[drained].set(0)
         self.stats.requeued += requeued
         self.stats.replans += 1
         if replan is not None:

@@ -1,0 +1,121 @@
+"""SLOScheduler driven by inject_jitter streams: σ recovery accuracy,
+straggler derating, and the recorded α/α_other deficit against the
+closed-form Eqs. 12/16 at the scheduler's own σ."""
+
+import numpy as np
+import pytest
+
+from repro.core import imbalance as imb
+from repro.core import planner as pln
+from repro.core.hardware import get_hardware
+from repro.core.modelspec import get_model
+from repro.serving.scheduler import SLOConfig, SLOScheduler, inject_jitter
+
+
+T_B = 1e-3
+
+
+def feed(sch, sigma_true, n=300, seed=0):
+    for lat in inject_jitter(T_B, n, sigma_true=sigma_true, seed=seed):
+        sch.observe(lat)
+
+
+@pytest.mark.parametrize("sigma_true", [0.6, 0.75, 0.9])
+def test_estimate_sigma_recovers_truth(sigma_true):
+    sch = SLOScheduler(SLOConfig(deadline_factor=10.0), mode="ep", lam=4.0)
+    feed(sch, sigma_true, seed=11)
+    est = sch.estimate_sigma(T_B)
+    # inject_jitter calibrates the stream's p95 to base/σ_true; the
+    # estimator sees a finite window so allow sampling slack
+    assert est == pytest.approx(sigma_true, abs=0.08)
+
+
+def test_estimate_sigma_balanced_stream_is_one():
+    sch = SLOScheduler(SLOConfig(), mode="ep")
+    for lat in inject_jitter(T_B, 200, sigma_true=1.0, seed=4):
+        sch.observe(lat)
+    assert sch.estimate_sigma(T_B) == 1.0
+    assert sch.straggler_rate(T_B) == 0.0
+
+
+def test_straggler_derate_triggers_above_threshold():
+    sch = SLOScheduler(SLOConfig(deadline_factor=1.2), mode="ep", lam=4.0)
+    # ~12% of the estimator window exceeds the 1.2·t_B deadline (mildly,
+    # so the raw σ estimate stays above the clamp floor)
+    lats = ([T_B] * 92 + [1.5 * T_B] * 8) * 2
+    for lat in lats:
+        sch.observe(lat)
+    d = sch.decide(t_budget=T_B)
+    assert d.straggler_rate > 0.05
+    # derate multiplies σ by (1 - rate): strictly below the raw estimate
+    raw = sch.estimate_sigma(T_B)
+    assert d.sigma < raw
+    assert d.sigma == pytest.approx(
+        max(sch.slo.sigma_floor, raw * (1.0 - d.straggler_rate)))
+
+
+def test_straggler_rate_below_threshold_no_derate():
+    sch = SLOScheduler(SLOConfig(deadline_factor=1.2), mode="ep", lam=4.0)
+    lats = [T_B] * 97 + [6 * T_B] * 3            # 3% < 5% threshold
+    for lat in lats:
+        sch.observe(lat)
+    d = sch.decide(t_budget=T_B)
+    assert d.straggler_rate <= 0.05
+    assert d.sigma == sch.estimate_sigma(T_B)
+
+
+def test_ep_decision_alpha_matches_eq12():
+    sch = SLOScheduler(SLOConfig(deadline_factor=10.0), mode="ep", lam=4.0)
+    feed(sch, 0.7, seed=21)
+    d = sch.decide(t_budget=T_B)
+    assert d.sigma < 1.0
+    assert d.alpha == pytest.approx(imb.alpha_ep(d.sigma, 4.0))
+    assert d.alpha_other == pytest.approx(imb.alpha_afd(d.sigma, 16, 4))
+    # Eq. 12 batch refill recovers more than the raw σ shrink
+    assert d.alpha >= d.sigma
+
+
+def test_afd_decision_alpha_matches_eq16():
+    plan = pln.plan_afd(get_model("DeepSeek-V3"), get_hardware("H800"))
+    sch = SLOScheduler(SLOConfig(deadline_factor=10.0), mode="afd",
+                       plan=plan)
+    feed(sch, 0.7, seed=22)
+    d = sch.decide(t_budget=T_B)
+    assert d.sigma < 1.0
+    assert d.alpha == pytest.approx(
+        imb.alpha_afd(d.sigma, plan.n_a, plan.n_f))
+    assert d.alpha_other == pytest.approx(
+        imb.alpha_ep(d.sigma, plan.lambda_afd))
+    # the §3.3 deficit: discrete AFD rescale retains at most what
+    # continuous EP refill would at the same σ (Eqs. 12 vs 16)
+    assert d.alpha <= d.alpha_other + 1e-9
+    assert d.n_a is not None and 1 <= d.n_a <= plan.n_a
+
+
+def test_alpha_deficit_shrinks_as_sigma_improves():
+    plan = pln.plan_afd(get_model("DeepSeek-V3"), get_hardware("H800"))
+    deficits = []
+    for sigma_true in (0.6, 0.8, 0.95):
+        sch = SLOScheduler(SLOConfig(deadline_factor=10.0), mode="afd",
+                           plan=plan)
+        feed(sch, sigma_true, seed=5)
+        d = sch.decide(t_budget=T_B)
+        deficits.append(d.alpha_other - d.alpha)
+    assert all(x >= -1e-9 for x in deficits)
+
+
+def test_decision_log_accumulates():
+    sch = SLOScheduler(SLOConfig(deadline_factor=10.0), mode="ep", lam=2.0)
+    feed(sch, 0.8, seed=9)
+    for _ in range(3):
+        sch.decide(t_budget=T_B)
+    assert len(sch.decisions) == 3
+    assert all(d.mode == "ep" for d in sch.decisions)
+
+
+def test_inject_jitter_calibration():
+    """The synthetic stream's p95 actually encodes σ_true."""
+    for sigma in (0.5, 0.8):
+        lats = inject_jitter(T_B, 4000, sigma_true=sigma, seed=13)
+        p95 = float(np.percentile(lats, 95))
+        assert T_B / p95 == pytest.approx(sigma, rel=0.05)

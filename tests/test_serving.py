@@ -55,6 +55,65 @@ def test_engine_output_matches_standalone_greedy(small_model):
     assert req.output == ref
 
 
+def test_engine_single_slot_matches_standalone_greedy(small_model):
+    """Regression: _splice_cache matched on whole-shape equality, so at
+    n_slots == 1 (prefill cache shape == batch cache shape) the prefill
+    cache was never written and decode ran on a stale/zero cache."""
+    cfg, model, params = small_model
+    prompt = np.asarray([5, 6, 7], np.int32)
+    lp, cache = model.prefill(params, {"tokens": jnp.asarray(prompt[None])},
+                              max_len=32)
+    ref = [int(jnp.argmax(lp[0]))]
+    cur = jnp.argmax(lp, -1).astype(jnp.int32)
+    for _ in range(3):
+        dl, cache = model.decode_step(params, cache, cur)
+        cur = jnp.argmax(dl, -1).astype(jnp.int32)
+        ref.append(int(cur[0]))
+    eng = DecodeEngine(model, params, n_slots=1, max_len=32)
+    req = Request(rid=0, prompt=prompt, max_new_tokens=4)
+    eng.submit(req)
+    eng.run(max_ticks=50)
+    assert req.output == ref
+
+
+def test_engine_sampling_applies_beyond_first_token(small_model):
+    """Regression: tick() always took argmax even with greedy=False —
+    sampling only ever applied to the prefill-produced first token."""
+    cfg, model, params = small_model
+    prompt = np.asarray([5, 6, 7], np.int32)
+
+    def run(seed):
+        eng = DecodeEngine(model, params, n_slots=1, max_len=64,
+                           greedy=False, seed=seed)
+        req = Request(rid=0, prompt=prompt, max_new_tokens=12)
+        eng.submit(req)
+        eng.run(max_ticks=100)
+        return req.output
+
+    out_a, out_a2, out_b = run(0), run(0), run(1)
+    assert out_a == out_a2                      # seeded: reproducible
+    assert out_a != out_b                       # seed changes decode tokens
+    # greedy reference: the sampled rollout must diverge from argmax past
+    # the first token (on the old code positions 1.. were always argmax)
+    eng = DecodeEngine(model, params, n_slots=1, max_len=64)
+    ref = Request(rid=0, prompt=prompt, max_new_tokens=12)
+    eng.submit(ref)
+    eng.run(max_ticks=100)
+    assert out_a[1:] != ref.output[1:]
+
+
+def test_engine_tokens_out_counts_prefill_token(small_model):
+    """Regression: the prefill-produced first token never reached
+    stats.tokens_out, under-reporting throughput by one per request."""
+    cfg, model, params = small_model
+    eng = DecodeEngine(model, params, n_slots=2, max_len=32)
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=np.asarray([1 + i, 2], np.int32),
+                           max_new_tokens=4))
+    eng.run(max_ticks=100)
+    assert eng.stats.tokens_out == 3 * 4        # every emitted token counted
+
+
 def test_failure_drain_and_recovery(small_model):
     cfg, model, params = small_model
     eng = DecodeEngine(model, params, n_slots=2, max_len=32)
@@ -63,11 +122,53 @@ def test_failure_drain_and_recovery(small_model):
                            max_new_tokens=3))
     eng.tick()
     replanned = []
+    # 25 % of 2 slots → ceil(0.5) = 1 slot drains; the other survives.
     n = eng.simulate_failure(0.25, replan=lambda f: replanned.append(f))
-    assert n == 2 and replanned == [0.75]
+    assert n == 1 and replanned == [0.75]
     eng.run(max_ticks=100)
     assert all(s is None for s in eng.slots) and not eng.queue
+    assert eng.stats.requeued == 1
+
+
+def test_failure_drains_only_affected_fraction(small_model):
+    """Regression: simulate_failure used to drain EVERY slot regardless of
+    the fraction and to zero every cache position."""
+    cfg, model, params = small_model
+    eng = DecodeEngine(model, params, n_slots=4, max_len=32)
+    for i in range(4):
+        eng.submit(Request(rid=i, prompt=np.asarray([1 + i, 2, 3], np.int32),
+                           max_new_tokens=8))
+    eng.tick()
+    survivors = [eng.slots[2], eng.slots[3]]
+    pos_before = np.asarray(eng.cache["pos"]).copy()
+    n = eng.simulate_failure(0.5)
+    assert n == 2
+    assert eng.slots[0] is None and eng.slots[1] is None
+    assert eng.slots[2] is survivors[0] and eng.slots[3] is survivors[1]
+    pos_after = np.asarray(eng.cache["pos"])
+    assert pos_after[0] == 0 and pos_after[1] == 0          # drained: reset
+    assert pos_after[2] == pos_before[2]                    # survivors keep
+    assert pos_after[3] == pos_before[3]                    # their caches
+    # survivors were untouched: they finish without being re-prefilled
+    eng.run(max_ticks=100)
     assert eng.stats.requeued == 2
+
+
+def test_failure_preserves_started_timestamp(small_model):
+    """Regression: _admit used to overwrite ``started`` on re-admission,
+    destroying TTFT accounting for requeued requests."""
+    cfg, model, params = small_model
+    eng = DecodeEngine(model, params, n_slots=1, max_len=32)
+    req = Request(rid=0, prompt=np.asarray([1, 2, 3], np.int32),
+                  max_new_tokens=6)
+    eng.submit(req)
+    eng.tick()
+    started0 = req.started
+    assert started0 > 0.0
+    eng.simulate_failure(1.0)
+    eng.run(max_ticks=100)
+    assert req.done
+    assert req.started == started0
 
 
 def test_scheduler_recovers_sigma():

@@ -1,0 +1,122 @@
+"""Open-loop traffic generation: determinism, Poisson statistics, phase
+structure (bursts/ramps via thinning), length-mixture validity."""
+
+import numpy as np
+import pytest
+
+from repro.serving.workload import (ArrivalEvent, LengthDist, Phase,
+                                    PROFILES, TrafficProfile, generate_trace,
+                                    get_profile, list_profiles)
+
+
+def test_trace_is_deterministic_per_seed():
+    prof = get_profile("poisson-burst")
+    a = generate_trace(prof, seed=3)
+    b = generate_trace(prof, seed=3)
+    c = generate_trace(prof, seed=4)
+    assert a == b
+    assert a != c
+
+
+def test_arrival_times_sorted_and_bounded():
+    for name in list_profiles():
+        prof = get_profile(name)
+        ev = generate_trace(prof, seed=1)
+        ts = [e.t for e in ev]
+        assert ts == sorted(ts)
+        assert all(0.0 <= t < prof.total_duration for t in ts)
+        assert [e.rid for e in ev] == list(range(len(ev)))
+
+
+def test_lengths_respect_distributions():
+    for name in list_profiles():
+        prof = get_profile(name)
+        for e in generate_trace(prof, seed=2):
+            pl, ol = prof.prompt_len, prof.output_len
+            assert (pl.lo <= e.prompt_len <= pl.hi
+                    or (pl.p_long > 0
+                        and pl.long_lo <= e.prompt_len <= pl.long_hi))
+            assert (ol.lo <= e.max_new_tokens <= ol.hi
+                    or (ol.p_long > 0
+                        and ol.long_lo <= e.max_new_tokens <= ol.long_hi))
+
+
+def test_poisson_count_near_expectation():
+    # constant 16 req/s for 4 s → N ~ Poisson(64); 5σ window
+    prof = get_profile("poisson-steady")
+    counts = [len(generate_trace(prof, seed=s)) for s in range(20)]
+    mean = float(np.mean(counts))
+    expect = prof.expected_requests
+    assert abs(mean - expect) < 5 * np.sqrt(expect / 20)
+
+
+def test_burst_phase_raises_local_rate():
+    prof = get_profile("poisson-burst")
+    p0, p1, _ = prof.phases
+    n_burst = 0
+    n_steady = 0
+    for s in range(10):
+        for e in generate_trace(prof, seed=s):
+            if p0.duration <= e.t < p0.duration + p1.duration:
+                n_burst += 1
+            elif e.t < p0.duration:
+                n_steady += 1
+    # burst rate is 4×: per-second arrival density must clearly exceed steady
+    assert n_burst / p1.duration > 2.0 * (n_steady / p0.duration)
+
+
+def test_ramp_thinning_shapes_the_rate():
+    # up-ramp 4→40 over 2 s: the second half must see far more arrivals
+    prof = TrafficProfile(name="up", phases=(Phase(2.0, 4.0, rate_end=40.0),),
+                          prompt_len=LengthDist(2, 4),
+                          output_len=LengthDist(3, 5))
+    early, late = 0, 0
+    for s in range(10):
+        for e in generate_trace(prof, seed=s):
+            if e.t < 1.0:
+                early += 1
+            else:
+                late += 1
+    assert late > 2 * early
+
+
+def test_max_requests_truncates():
+    ev = generate_trace(get_profile("poisson-steady"), seed=0, max_requests=5)
+    assert len(ev) == 5
+
+
+def test_silent_phase_produces_gap():
+    prof = TrafficProfile(
+        name="gap",
+        phases=(Phase(1.0, 10.0), Phase(1.0, 0.0), Phase(1.0, 10.0)),
+        prompt_len=LengthDist(2, 4), output_len=LengthDist(3, 5))
+    ev = generate_trace(prof, seed=0)
+    assert ev, "expected arrivals in the active phases"
+    assert not any(1.0 <= e.t < 2.0 for e in ev)
+    assert any(e.t >= 2.0 for e in ev)
+
+
+def test_length_dist_validation():
+    with pytest.raises(ValueError):
+        LengthDist(5, 2)
+    with pytest.raises(ValueError):
+        LengthDist(2, 5, p_long=1.5)
+    with pytest.raises(ValueError):
+        LengthDist(2, 5, long_lo=9, long_hi=4, p_long=0.2)
+    with pytest.raises(ValueError):
+        Phase(duration=0.0, rate=4.0)
+    with pytest.raises(ValueError):
+        Phase(duration=1.0, rate=-1.0)
+
+
+def test_profiles_fit_smoke_engine_max_len():
+    # every named profile must fit the serving smoke setting (max_len 32):
+    # worst-case prompt + worst-case output + first token < 32
+    for name, prof in PROFILES.items():
+        worst = prof.prompt_len.max_len + prof.output_len.max_len
+        assert worst < 32, f"{name} can overflow the smoke cache"
+
+
+def test_unknown_profile_raises_with_known_names():
+    with pytest.raises(KeyError, match="poisson-steady"):
+        get_profile("nope")
