@@ -30,6 +30,7 @@ MODULES = [
     "benchmarks.afd_vs_ep_system",
     "benchmarks.ablation_overlap_capacity",
     "benchmarks.serve_traffic_smoke",
+    "benchmarks.fleet_smoke",
 ]
 
 

@@ -5,8 +5,10 @@ Subcommands:
   sweep         — vectorized §3 grid (named sweep or explicit axes).
   bench         — scalar-loop vs vectorized-sweep equivalence + speedup.
   serve-traffic — two-role AFD serving engine under a stochastic trace.
+  serve-fleet   — multi-replica fleet: routed traffic, KV-aware balancing,
+                  failure drain/requeue, elastic N_F rescale.
   list          — registry contents (models, hardware, scenarios, sweeps,
-                  traffic profiles).
+                  traffic profiles, fleet router policies).
 
 Analysis subcommands import no jax, so the CLI starts in milliseconds
 and runs anywhere; ``serve-traffic`` is the exception — it lowers a
@@ -75,6 +77,12 @@ def cmd_list(args) -> int:
             print(f"  {name:14s} {prof.total_duration:4.1f}s "
                   f"~{prof.expected_requests:5.0f} req  "
                   f"{prof.description}")
+    if kind in ("routers", "all"):
+        from repro.fleet.router import ROUTER_POLICIES
+        print("fleet router policies:")
+        for name in sorted(ROUTER_POLICIES):
+            doc = (ROUTER_POLICIES[name].__doc__ or "").split("\n")[0]
+            print(f"  {name:14s} {doc}")
     return 0
 
 
@@ -316,6 +324,170 @@ def cmd_serve_traffic(args) -> int:
     return 0
 
 
+def _parse_shapes(arg: Optional[str], n: int, n_bo: int,
+                  mb_slots: int) -> List[tuple]:
+    """Parse ``--replica-shapes 2x2,2x2,1x4`` into (n_bo, mb_slots) pairs;
+    default: ``n`` homogeneous replicas of the given shape."""
+    if not arg:
+        return [(n_bo, mb_slots)] * n
+    shapes = []
+    for part in arg.split(","):
+        try:
+            bo, slots = part.strip().lower().split("x")
+            shapes.append((int(bo), int(slots)))
+        except ValueError:
+            raise ValueError(
+                f"bad replica shape {part!r}; want N_BOxSLOTS, e.g. 2x2"
+            ) from None
+    return shapes
+
+
+def _parse_failures(args: Optional[List[str]]) -> List:
+    """Parse repeated ``--fail T:REPLICA[:FRAC]`` into FailureEvents."""
+    from repro.fleet.events import FailureEvent
+    events = []
+    for spec in args or []:
+        parts = spec.split(":")
+        if len(parts) not in (2, 3):
+            raise ValueError(
+                f"bad failure spec {spec!r}; want T:REPLICA[:FRAC]")
+        events.append(FailureEvent(
+            t=float(parts[0]), replica=int(parts[1]),
+            frac=float(parts[2]) if len(parts) == 3 else 1.0))
+    return events
+
+
+def cmd_serve_fleet(args) -> int:
+    import dataclasses
+
+    import jax                                     # lazy: jax-backed command
+
+    from repro import configs
+    from repro.api import registry
+    from repro.core import planner as pln
+    from repro.core.planner import PlanningError
+    from repro.fleet.controller import FleetController, FleetReplica
+    from repro.fleet.rescaler import ElasticRescaler
+    from repro.models.model import make_model
+    from repro.parallel.afd import AFDRuntime, split_nodes
+    from repro.serving.afd_engine import AFDServeEngine, HFUProbe
+    from repro.serving.workload import generate_trace, get_profile
+
+    profile = get_profile(args.profile)
+    cfg = configs.get_smoke_config(args.arch)
+    if not cfg.is_moe:
+        print(f"error: {args.arch} is dense — the two-role AFD engine "
+              "needs routed experts", file=sys.stderr)
+        return 2
+    shapes = _parse_shapes(args.replica_shapes, args.replicas,
+                           args.n_bo, args.mb_slots)
+    failures = _parse_failures(args.fail)
+    for f in failures:
+        if not 0 <= f.replica < len(shapes):
+            print(f"error: --fail targets replica {f.replica} but the "
+                  f"fleet has {len(shapes)}", file=sys.stderr)
+            return 2
+
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    devs = jax.devices()
+    if len(devs) >= 2:
+        half = len(devs) // 2
+        a_dev, f_dev = split_nodes(devs, half, len(devs) - half)
+    else:
+        a_dev = f_dev = [devs[0]]
+
+    spec = registry.spec_from_arch_config(cfg)
+    hw = registry.resolve_hardware(args.hardware)
+    plan, probe, rescaler = None, None, None
+    try:
+        plan = pln.plan_afd(spec, hw)
+        probe = HFUProbe(model=spec, hardware=hw, plan=plan)
+        if args.rescale:
+            rescaler = ElasticRescaler(spec, hw, plan)
+    except PlanningError as e:
+        print(f"warning: no AFD plan for {args.arch} on {args.hardware} "
+              f"({e}); HFU probe and rescaler disabled", file=sys.stderr)
+
+    tick_s = args.tick_ms * 1e-3
+    replicas = []
+    for i, (bo, slots) in enumerate(shapes):
+        rt = AFDRuntime(cfg, params, a_dev, f_dev)
+        eng = AFDServeEngine(
+            rt, max_len=args.max_len, n_bo=bo, mb_slots=slots,
+            probe=probe, seed=args.seed, slo_tpot=args.slo_tpot,
+            slo_ttft=args.slo_ttft, tick_seconds=tick_s,
+            window_ticks=args.window_ticks)
+        if args.kv_budget_slots is not None:
+            # bytes-based admission cap as a fraction of the preallocated
+            # full-length cache (1.0 = the flat slot cap, <1 tightens)
+            eng.kv_budget_bytes = int(args.kv_budget_slots
+                                      * eng.kv_slot_bytes * bo * slots)
+        replicas.append(FleetReplica(name=f"replica{i}", engine=eng))
+
+    fleet = FleetController(replicas, router=args.router,
+                            rescaler=rescaler,
+                            window_ticks=args.window_ticks)
+    trace = generate_trace(profile, seed=args.seed,
+                           max_requests=args.max_requests)
+    t0 = time.perf_counter()
+    windows = fleet.run(trace, failures=failures, max_ticks=args.max_ticks)
+    wall = time.perf_counter() - t0
+    summary = fleet.summary()
+    summary["wall_s"] = wall
+
+    doc = {"profile": profile.name, "arch": args.arch, "seed": args.seed,
+           "router": args.router,
+           "shapes": [f"{b}x{s}" for b, s in shapes],
+           "failures": [dataclasses.asdict(f) for f in failures],
+           "windows": [dataclasses.asdict(w) for w in windows],
+           "rescales": [dataclasses.asdict(e) for e in fleet.rescales],
+           "summary": summary}
+    if args.json:
+        payload = json.dumps(doc, indent=2, sort_keys=True, default=float)
+        if args.json == "-":
+            print(payload)
+        else:
+            with open(args.json, "w") as fh:
+                fh.write(payload + "\n")
+    if args.json != "-":
+        print(f"# fleet of {len(replicas)} ({args.router}) on "
+              f"{profile.name} seed={args.seed}: {len(trace)} arrivals, "
+              f"{summary['fleet_ticks']} fleet ticks, "
+              f"{len(windows)} windows, wall {wall:.1f}s")
+        print("win  t[s]        arr done  q live sigma  n_f bytes_ok "
+              "events")
+        for w in windows:
+            ev = ""
+            if w.failures:
+                ev += " fail" * len(w.failures)
+            if w.rescale:
+                ev += (f" rescale:{w.rescale['old_n_f']}"
+                       f"->{w.rescale['new_n_f']}")
+            print(f"{w.window:3d}  {w.t_start:5.2f}-{w.t_end:5.2f} "
+                  f"{w.arrivals:4d} {w.completed:4d} {w.queue_len:2d} "
+                  f"{w.live:4d} {w.sigma_load:5.2f} {w.n_f:4d} "
+                  f"{str(w.bytes_match):>8s}{ev}")
+        for name, r in summary["per_replica"].items():
+            print(f"  {name}: dispatched={r['dispatched']} "
+                  f"requeued_in={r['requeued_in']} "
+                  f"completed={r['completed']} healthy={r['healthy']}")
+        print(f"summary: completed={summary['completed']}"
+              f"/{summary['arrivals']} lost={summary['lost']} "
+              f"requeued={summary['requeued']} "
+              f"rescales={summary['rescale_events']} "
+              f"goodput={summary['goodput_rps']:.2f} req/s "
+              f"bytes_match_all={summary['bytes_match_all']}")
+    if not summary["bytes_match_all"]:
+        print("FAIL: a replica's measured M2N bytes diverged from the "
+              "Eq. 9/17 prediction", file=sys.stderr)
+        return 1
+    if summary["lost"]:
+        print(f"FAIL: {summary['lost']} requests lost", file=sys.stderr)
+        return 1
+    return 0
+
+
 def build_parser() -> argparse.ArgumentParser:
     p = argparse.ArgumentParser(
         prog="python -m repro",
@@ -388,10 +560,49 @@ def build_parser() -> argparse.ArgumentParser:
                     help="write windows+summary JSON ('-' for stdout)")
     st.set_defaults(fn=cmd_serve_traffic)
 
+    sf = sub.add_parser(
+        "serve-fleet",
+        help="multi-replica AFD fleet: routing, failover, elastic N_F")
+    sf.add_argument("--profile", required=True,
+                    help="traffic profile (see: python -m repro list traffic)")
+    sf.add_argument("--arch", default="granite-moe-1b-a400m",
+                    help="smoke architecture to serve (MoE only)")
+    sf.add_argument("--hardware", default="H800",
+                    help="hardware spec for the HFU probe + rescaler")
+    sf.add_argument("--replicas", type=int, default=3)
+    sf.add_argument("--replica-shapes", default=None,
+                    help="heterogeneous shapes N_BOxSLOTS,... "
+                         "(e.g. 2x2,2x2,1x4 for a PD+AFD mix); "
+                         "overrides --replicas/--n-bo/--mb-slots")
+    sf.add_argument("--router", default="round-robin",
+                    help="routing policy (see: python -m repro list routers)")
+    sf.add_argument("--fail", action="append", metavar="T:REPLICA[:FRAC]",
+                    help="inject a failure at virtual time T (repeatable); "
+                         "FRAC<1 drains part of the replica, default 1.0 "
+                         "kills it and re-routes its requests")
+    sf.add_argument("--no-rescale", dest="rescale", action="store_false",
+                    help="disable the elastic N_F rescaler")
+    sf.add_argument("--kv-budget-slots", type=float, default=None,
+                    help="KV admission budget as a fraction of the "
+                         "preallocated cache (default: flat slot cap)")
+    sf.add_argument("--seed", type=int, default=0)
+    sf.add_argument("--max-requests", type=int, default=None)
+    sf.add_argument("--max-ticks", type=int, default=5000)
+    sf.add_argument("--max-len", type=int, default=32)
+    sf.add_argument("--n-bo", type=int, default=2)
+    sf.add_argument("--mb-slots", type=int, default=2)
+    sf.add_argument("--window-ticks", type=int, default=8)
+    sf.add_argument("--tick-ms", type=float, default=10.0)
+    sf.add_argument("--slo-tpot", type=float, default=0.05)
+    sf.add_argument("--slo-ttft", type=float, default=1.0)
+    sf.add_argument("--json", default=None, metavar="PATH",
+                    help="write windows+summary JSON ('-' for stdout)")
+    sf.set_defaults(fn=cmd_serve_fleet, rescale=True)
+
     ls = sub.add_parser("list", help="registry contents")
     ls.add_argument("kind", nargs="?", default="all",
                     choices=["all", "models", "hardware", "scenarios",
-                             "sweeps", "traffic"])
+                             "sweeps", "traffic", "routers"])
     ls.set_defaults(fn=cmd_list)
     return p
 

@@ -134,6 +134,19 @@ def list_hardware() -> List[str]:
     return sorted(HARDWARE)
 
 
+# --- fleet router policies -------------------------------------------------
+
+def resolve_router(name: str):
+    """Resolve a fleet routing policy by name (``repro.fleet.router``)."""
+    from repro.fleet.router import get_policy
+    return get_policy(name)
+
+
+def list_routers() -> List[str]:
+    from repro.fleet.router import list_policies
+    return list_policies()
+
+
 # --- named sweeps ----------------------------------------------------------
 
 # Platform order of the paper's Fig. 4 table.

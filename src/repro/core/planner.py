@@ -194,6 +194,76 @@ def elastic_rescale(plan: AFDPlan, sigma: float) -> RescaleDecision:
         alpha=alpha, alpha_ep_reference=imb.alpha_ep(sigma, plan.lambda_afd))
 
 
+@dataclasses.dataclass(frozen=True)
+class NFRescaleDecision:
+    """§3.3 applied to the FFN fleet: the discrete N_F re-plan decision.
+
+    Under measured load fraction σ (demand / provisioned capacity, may
+    exceed 1 under overload), the ideal *continuous* fleet is σ·N_F — EP's
+    batch adjustment tracks it exactly (α = 1). AFD must pick an integer,
+    paying the quantization penalty the paper prices: α(n) = min(n/x, x/n)
+    (saturated → serves n/x of demand; over-provisioned → utilization x/n).
+    """
+    sigma: float
+    old_n_f: int
+    new_n_f: int
+    rounding: str               # "exact" | "floor" | "ceil"
+    alpha_stay: float           # α of keeping the current N_F
+    alpha_new: float            # α of the best discrete choice
+    alpha_continuous: float     # EP-style continuous reference (= 1)
+    penalty: float              # 1 − alpha_stay: what staying put costs
+    residual_penalty: float     # 1 − alpha_new: what rounding still costs
+    threshold: float            # predicted dead-zone penalty threshold
+    triggered: bool             # penalty > threshold and a move exists
+
+
+def nf_quantization_threshold(n_f: int) -> float:
+    """Predicted dead-zone penalty threshold at fleet size ``n_f``.
+
+    The worst-case rounding loss sits at half-integer demand x = k + ½
+    where the best discrete α ≈ (k+½)/(k+1), i.e. a penalty ≈ ½/(N_F+1).
+    A measured penalty beyond half that bound cannot be explained by
+    unavoidable quantization alone — the fleet is mis-provisioned and a
+    discrete re-plan is worth its cost.
+    """
+    return 0.25 / (n_f + 1)
+
+
+def rescale_n_f(plan: AFDPlan, sigma: float,
+                threshold: Optional[float] = None) -> NFRescaleDecision:
+    """Decide whether measured load σ warrants a discrete N_F re-plan.
+
+    The fleet rescaler calls this per window; the decision is pure and
+    deterministic so fleet runs (and the fleet-smoke golden) can recompute
+    it from the recorded (σ, old N_F, threshold) and demand agreement.
+    """
+    if sigma <= 0:
+        raise PlanningError(f"load fraction must be positive, got {sigma}")
+    x = sigma * plan.n_f
+
+    def alpha(n: int) -> float:
+        return min(n / x, x / n)
+
+    lo = max(1, math.floor(x))
+    hi = max(1, math.ceil(x))
+    if lo == hi:
+        new_n_f, rounding = lo, "exact"
+    elif alpha(lo) >= alpha(hi):
+        new_n_f, rounding = lo, "floor"
+    else:
+        new_n_f, rounding = hi, "ceil"
+    a_stay = alpha(plan.n_f)
+    a_new = alpha(new_n_f)
+    thr = (nf_quantization_threshold(plan.n_f) if threshold is None
+           else threshold)
+    penalty = 1.0 - a_stay
+    return NFRescaleDecision(
+        sigma=sigma, old_n_f=plan.n_f, new_n_f=new_n_f, rounding=rounding,
+        alpha_stay=a_stay, alpha_new=a_new, alpha_continuous=1.0,
+        penalty=penalty, residual_penalty=1.0 - a_new, threshold=thr,
+        triggered=penalty > thr and new_n_f != plan.n_f)
+
+
 # ---------------------------------------------------------------------------
 # Live measurement ↔ prediction (the serving engines check the paper's
 # analytics against what the two-role runtime actually did)

@@ -1,0 +1,30 @@
+"""Fleet layer: multi-instance AFD routing, KV-aware balancing, failure
+drain/requeue, and elastic N_F rescale (§3.3 as a live fleet policy).
+
+``fleet.router`` and ``fleet.events`` are jax-free (the CLI lists router
+policies without importing the serving runtime); ``FleetController`` and
+``ElasticRescaler`` are re-exported lazily so ``import repro.fleet``
+stays lightweight until a fleet actually runs.
+"""
+
+from repro.fleet.events import DrainRecord, FailureEvent, RescaleEvent
+from repro.fleet.router import (ROUTER_POLICIES, ReplicaView, RouteRequest,
+                                RouterPolicy, get_policy, list_policies)
+
+__all__ = [
+    "DrainRecord", "FailureEvent", "RescaleEvent",
+    "ROUTER_POLICIES", "ReplicaView", "RouteRequest", "RouterPolicy",
+    "get_policy", "list_policies",
+    "ElasticRescaler", "FleetController", "FleetReplica",
+    "FleetWindowRecord",
+]
+
+
+def __getattr__(name: str):
+    if name == "ElasticRescaler":
+        from repro.fleet.rescaler import ElasticRescaler
+        return ElasticRescaler
+    if name in ("FleetController", "FleetReplica", "FleetWindowRecord"):
+        from repro.fleet import controller
+        return getattr(controller, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,66 @@
+"""Fleet event types: failures injected into a run, and the rescale /
+drain records the controller emits.
+
+All types are flat frozen dataclasses so they serialize through
+``api.records.Record`` unchanged and land in the fleet window stream /
+the fleet-smoke golden as plain JSON.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureEvent:
+    """A scheduled replica failure on the fleet's virtual clock.
+
+    ``frac < 1`` is a partial failure: the replica loses ``ceil(frac ·
+    total_slots)`` slots (``AFDServeEngine.simulate_failure`` semantics)
+    and keeps serving. ``frac == 1`` kills the replica: it is drained via
+    ``drain_all`` and its requests are re-routed to healthy replicas.
+    """
+    t: float
+    replica: int
+    frac: float = 1.0
+
+    def __post_init__(self):
+        if not 0.0 < self.frac <= 1.0:
+            raise ValueError(f"frac must be in (0, 1], got {self.frac}")
+        if self.t < 0:
+            raise ValueError(f"failure time must be ≥ 0, got {self.t}")
+
+
+@dataclasses.dataclass(frozen=True)
+class DrainRecord:
+    """What a fired FailureEvent actually did."""
+    t: float
+    replica: int
+    frac: float
+    requeued: int               # in-flight + queued requests re-routed
+    fatal: bool                 # replica left the fleet
+
+
+@dataclasses.dataclass(frozen=True)
+class RescaleEvent:
+    """One discrete N_F re-plan emitted by the elastic rescaler.
+
+    Mirrors ``core.planner.NFRescaleDecision`` plus the window context and
+    the re-planned HFU, so the decision can be recomputed and checked
+    against the planner from the record alone.
+    """
+    window: int
+    t: float
+    sigma: float
+    old_n_f: int
+    new_n_f: int
+    rounding: str
+    alpha_stay: float
+    alpha_new: float
+    penalty: float
+    residual_penalty: float
+    threshold: float
+    hfu_old: float
+    hfu_new: float
+    n_a_old: int
+    n_a_new: int

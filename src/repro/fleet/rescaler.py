@@ -1,0 +1,94 @@
+"""Elastic N_F rescaling — §3.3's discrete-scaling penalty as a live
+closed-loop fleet policy.
+
+Per fleet window the controller hands the rescaler the measured load
+fraction σ (demand tokens / provisioned decode-slot capacity; > 1 under
+backlog). The rescaler prices staying at the current N_F against the
+continuous ideal through ``core.planner.rescale_n_f`` and, when the
+imbalance penalty exceeds the predicted dead-zone threshold, re-plans the
+deployment at the chosen discrete N_F through ``core.planner.plan_afd``.
+The new plan becomes the baseline the *next* window is judged against —
+the loop is closed, not a one-shot formula.
+
+Every decision (triggered or not) is logged; every executed re-plan is a
+``RescaleEvent`` carrying (σ, old N_F, threshold), from which the planner
+decision can be recomputed and checked — the fleet tests and the smoke
+golden do exactly that.
+
+Pure python + ``core.planner`` (no jax): the rescaler runs anywhere the
+CLI does.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.core import budget as bdg
+from repro.core import planner as pln
+from repro.core.hardware import HardwareSpec
+from repro.core.modelspec import MoEModelSpec
+from repro.fleet.events import RescaleEvent
+
+
+class ElasticRescaler:
+    def __init__(self, model: MoEModelSpec, hardware: HardwareSpec,
+                 plan: Optional[pln.AFDPlan] = None, *,
+                 scenario: Optional[bdg.Scenario] = None,
+                 threshold: Optional[float] = None,
+                 cooldown_windows: int = 0,
+                 max_total_nodes: int = 512):
+        self.model = model
+        self.hardware = hardware
+        self.scenario = scenario or bdg.Scenario()
+        self.plan = plan if plan is not None else pln.plan_afd(
+            model, hardware, self.scenario)
+        # The controller measures σ against the *deployed* fleet's slot
+        # capacity, which is provisioned by the baseline plan and does not
+        # change when this rescaler re-plans. Re-express each window's σ
+        # in the current plan's units (σ_plan = σ_deployed · N_F0 / N_F)
+        # so the ideal continuous fleet σ_plan·N_F tracks demand instead
+        # of compounding through successive re-plans.
+        self.baseline_n_f = self.plan.n_f
+        self.threshold = threshold
+        self.cooldown_windows = cooldown_windows
+        self.max_total_nodes = max_total_nodes
+        self.decisions: List[pln.NFRescaleDecision] = []
+        self.events: List[RescaleEvent] = []
+        self._last_rescale_window = -10**9
+
+    @property
+    def n_f(self) -> int:
+        return self.plan.n_f
+
+    def observe(self, window: int, t: float,
+                sigma: float) -> Optional[RescaleEvent]:
+        """Judge one fleet window; execute and return a re-plan if the
+        §3.3 penalty of staying put exceeds the dead-zone threshold."""
+        if sigma <= 0:
+            return None                     # idle window: nothing to price
+        sigma_plan = sigma * self.baseline_n_f / self.plan.n_f
+        dec = pln.rescale_n_f(self.plan, sigma_plan, self.threshold)
+        self.decisions.append(dec)
+        if not dec.triggered:
+            return None
+        if window - self._last_rescale_window <= self.cooldown_windows:
+            return None
+        try:
+            new_plan = pln.plan_afd(
+                self.model, self.hardware, self.scenario,
+                n_f=dec.new_n_f, max_total_nodes=self.max_total_nodes)
+        except pln.PlanningError:
+            return None                     # target infeasible: stay put
+        event = RescaleEvent(
+            window=window, t=t, sigma=dec.sigma,
+            old_n_f=dec.old_n_f, new_n_f=dec.new_n_f,
+            rounding=dec.rounding, alpha_stay=dec.alpha_stay,
+            alpha_new=dec.alpha_new, penalty=dec.penalty,
+            residual_penalty=dec.residual_penalty,
+            threshold=dec.threshold,
+            hfu_old=self.plan.hfu, hfu_new=new_plan.hfu,
+            n_a_old=self.plan.n_a, n_a_new=new_plan.n_a)
+        self.plan = new_plan
+        self.events.append(event)
+        self._last_rescale_window = window
+        return event

@@ -1,0 +1,124 @@
+"""Pluggable request routing across AFD serving replicas.
+
+Policies see an immutable per-replica ``ReplicaView`` (queue depth, live
+slots, KV-cache occupancy, pending prompt work) and pick a replica for
+each arrival. Everything is deterministic — no wall clock, no RNG — so a
+(trace, seed, policy) triple routes identically on every run, which the
+fleet-smoke CI job asserts.
+
+This module is jax-free on purpose: the ``api`` registry and CLI list the
+policies without touching the serving runtime.
+
+Policies (``python -m repro list routers``):
+  round-robin     cycle over healthy replicas
+  least-kv        least KV-cache bytes committed (live + queued)
+  predicted-ttft  smallest predicted time-to-first-token
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Type
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaView:
+    """Routing-relevant snapshot of one healthy replica."""
+    index: int                  # fleet-wide replica index
+    name: str
+    queue_len: int
+    live: int
+    total_slots: int
+    kv_occupancy_bytes: int
+    kv_budget_bytes: int
+    queued_kv_bytes: int
+    queued_prompt_tokens: int
+    queued_pending_tokens: int
+    tick_seconds: float
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteRequest:
+    """What a policy gets to know about the arrival being placed."""
+    rid: int
+    t: float
+    prompt_len: int
+    max_new_tokens: int
+
+
+class RouterPolicy:
+    """Base class: ``choose`` returns the fleet index of the target."""
+
+    name = "base"
+
+    def choose(self, req: RouteRequest,
+               views: Sequence[ReplicaView]) -> int:
+        raise NotImplementedError
+
+
+class RoundRobinRouter(RouterPolicy):
+    """Cycle over the healthy replicas in fleet order."""
+
+    name = "round-robin"
+
+    def __init__(self) -> None:
+        self._i = 0
+
+    def choose(self, req: RouteRequest,
+               views: Sequence[ReplicaView]) -> int:
+        view = views[self._i % len(views)]
+        self._i += 1
+        return view.index
+
+
+class LeastKVRouter(RouterPolicy):
+    """Least KV-cache bytes committed: live reservations plus the queued
+    requests' worst-case footprints. Ties break to the lowest index, so
+    routing stays deterministic."""
+
+    name = "least-kv"
+
+    def choose(self, req: RouteRequest,
+               views: Sequence[ReplicaView]) -> int:
+        return min(views, key=lambda v: (v.kv_occupancy_bytes
+                                         + v.queued_kv_bytes,
+                                         v.index)).index
+
+
+class PredictedTTFTRouter(RouterPolicy):
+    """Smallest predicted TTFT under the engines' virtual-clock cost
+    model: prefill is one tick per prompt token (queued prompts serialize
+    ahead of this one), and a backlog beyond the slot count waits for a
+    full generation to drain per excess request."""
+
+    name = "predicted-ttft"
+
+    def predict(self, req: RouteRequest, v: ReplicaView) -> float:
+        prefill_ticks = v.queued_prompt_tokens + req.prompt_len
+        excess = max(0, v.live + v.queue_len + 1 - v.total_slots)
+        wait_ticks = excess * max(req.max_new_tokens, 1)
+        return v.tick_seconds * (prefill_ticks + wait_ticks)
+
+    def choose(self, req: RouteRequest,
+               views: Sequence[ReplicaView]) -> int:
+        return min(views,
+                   key=lambda v: (self.predict(req, v), v.index)).index
+
+
+ROUTER_POLICIES: Dict[str, Type[RouterPolicy]] = {
+    cls.name: cls
+    for cls in (RoundRobinRouter, LeastKVRouter, PredictedTTFTRouter)
+}
+
+
+def get_policy(name: str) -> RouterPolicy:
+    try:
+        return ROUTER_POLICIES[name]()
+    except KeyError:
+        raise KeyError(
+            f"unknown router policy {name!r}; "
+            f"known: {sorted(ROUTER_POLICIES)}") from None
+
+
+def list_policies() -> List[str]:
+    return sorted(ROUTER_POLICIES)

@@ -49,8 +49,9 @@ from repro.core import budget as bdg
 from repro.core import planner as pln
 from repro.core.hardware import HardwareSpec
 from repro.core.modelspec import MoEModelSpec
+from repro.models.kvcache import attn_cache_len
 from repro.parallel.afd import AFDRuntime
-from repro.serving.engine import PAD, splice_batch_slot
+from repro.serving.engine import PAD, failure_drain_count, splice_batch_slot
 from repro.serving.scheduler import SLOScheduler
 from repro.serving.workload import ArrivalEvent
 
@@ -132,6 +133,9 @@ class WindowRecord:
     predicted_combine_bytes: int
     bytes_match: bool
     tokens_routed: int                  # per-MoE-stage tokens this window
+    # KV-cache occupancy (bytes-based admission, fleet routing signal)
+    kv_occupancy_bytes: int = 0
+    kv_budget_bytes: int = 0
     # §3.3 policy loop
     sigma: Optional[float] = None
     straggler_rate: Optional[float] = None
@@ -150,9 +154,12 @@ class WindowRecord:
 class ServeStats:
     decode_ticks: int = 0
     prefills: int = 0
+    prefill_tokens: int = 0
     tokens_out: int = 0
     arrivals: int = 0
     completed: int = 0
+    requeued: int = 0
+    replans: int = 0
 
 
 class AFDServeEngine:
@@ -166,7 +173,8 @@ class AFDServeEngine:
                  slo_tpot: float = 0.05, slo_ttft: float = 1.0,
                  tick_seconds: Optional[float] = 0.05,
                  tick_latencies: Optional[Sequence[float]] = None,
-                 window_ticks: int = 8):
+                 window_ticks: int = 8,
+                 kv_budget_bytes: Optional[int] = None):
         if n_bo < 1 or mb_slots < 1:
             raise ValueError("need n_bo ≥ 1 and mb_slots ≥ 1")
         self.rt = runtime
@@ -198,6 +206,26 @@ class AFDServeEngine:
 
         self._moe_layers = sum(1 for s in runtime.specs if s.moe)
         self._dtype_bytes = int(np.dtype(self.cfg.compute_dtype).itemsize)
+
+        # KV-cache footprint model (models/kvcache.py shapes × max_len):
+        # attention layers cost 2·n_kv·d_head bytes per cached token (ring-
+        # capped for sliding-window archs); SSM layers are O(1) per slot.
+        cfg = self.cfg
+        self._kv_ring_len = attn_cache_len(cfg, max_len)
+        self._kv_token_bytes = sum(
+            2 * cfg.n_kv_heads * cfg.d_head * self._dtype_bytes
+            for s in runtime.specs if s.kind == "attn")
+        self._kv_static_bytes = sum(
+            (cfg.ssm_conv - 1) * cfg.conv_dim * self._dtype_bytes
+            + cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4
+            for s in runtime.specs if s.kind == "mamba")
+        self.kv_slot_bytes = (self._kv_static_bytes
+                              + self._kv_token_bytes * self._kv_ring_len)
+        # Default budget = the preallocated cache: one full-length slot per
+        # batch position, i.e. the bytes-based cap degenerates to the old
+        # flat total_slots cap and never tightens admission on its own.
+        self.kv_budget_bytes = (kv_budget_bytes if kv_budget_bytes is not None
+                                else self.total_slots * self.kv_slot_bytes)
         self._open_window()
 
     # ---- plumbing ----------------------------------------------------------
@@ -218,6 +246,53 @@ class AFDServeEngine:
 
     def live_count(self) -> int:
         return sum(len(mb.live()) for mb in self.mbs)
+
+    def live_requests(self) -> List[ServeRequest]:
+        return [r for mb in self.mbs for r in mb.slots if r is not None]
+
+    # ---- KV-cache occupancy accounting -------------------------------------
+
+    def kv_request_bytes(self, prompt_len: int, max_new_tokens: int) -> int:
+        """Worst-case KV footprint reserved for one request at admission:
+        prompt + full output, capped at the cache length (ring caches cap
+        at the window)."""
+        toks = min(prompt_len + max_new_tokens, self.max_len,
+                   self._kv_ring_len)
+        return self._kv_static_bytes + self._kv_token_bytes * toks
+
+    def kv_occupancy_bytes(self) -> int:
+        """Reserved KV bytes across the live batch (admission-time
+        worst-case reservations, released at completion/drain)."""
+        return sum(self.kv_request_bytes(len(r.prompt), r.max_new_tokens)
+                   for r in self.live_requests())
+
+    def queued_kv_bytes(self) -> int:
+        return sum(self.kv_request_bytes(len(r.prompt), r.max_new_tokens)
+                   for r in self.queue)
+
+    def queued_prompt_tokens(self) -> int:
+        return sum(len(r.prompt) for r in self.queue)
+
+    def queued_pending_tokens(self) -> int:
+        return sum(r.max_new_tokens for r in self.queue)
+
+    # ---- cumulative wire prediction (fleet-window byte conformance) --------
+
+    def predicted_wire_bytes(self) -> tuple:
+        """Cumulative (dispatch, combine) bytes the Eq. 9/17 wire model
+        predicts for everything this engine has executed since start —
+        the fleet layer diffs snapshots of this against the runtime's
+        measured ``AFDStats`` counters per fleet window."""
+        cyc_d, cyc_c = pln.predict_m2n_cycle_bytes(
+            self.mb_slots, self.cfg.d_model, self.cfg.top_k,
+            dtype_bytes=self._dtype_bytes)
+        pf_d, pf_c = pln.predict_m2n_cycle_bytes(
+            1, self.cfg.d_model, self.cfg.top_k,
+            dtype_bytes=self._dtype_bytes)
+        decode_cycles = self.stats.decode_ticks * self.n_bo * self._moe_layers
+        prefill_cycles = self.stats.prefill_tokens * self._moe_layers
+        return (decode_cycles * cyc_d + prefill_cycles * pf_d,
+                decode_cycles * cyc_c + prefill_cycles * pf_c)
 
     def _tick_duration(self, wall0: float) -> float:
         if self._latencies is not None:
@@ -280,6 +355,8 @@ class AFDServeEngine:
                          and delta.combine_bytes == pred_combine),
             tokens_routed=(delta.tokens_routed // self._moe_layers
                            if self._moe_layers else 0),
+            kv_occupancy_bytes=self.kv_occupancy_bytes(),
+            kv_budget_bytes=self.kv_budget_bytes,
         )
         if self.scheduler is not None:
             d = self.scheduler.decide(self._policy_budget())
@@ -350,6 +427,7 @@ class AFDServeEngine:
             logits, caches, pos = self.rt.decode_step(
                 jnp.asarray([tok], jnp.int32), caches, pos)
         self._w_prefill_tokens += len(req.prompt)
+        self.stats.prefill_tokens += len(req.prompt)
         if self._latencies is not None or self.tick_seconds is not None:
             base = (self.tick_seconds if self.tick_seconds is not None
                     else self._latencies[0])
@@ -366,6 +444,15 @@ class AFDServeEngine:
                     return
                 if mb.slots[slot] is not None:
                     continue
+                head = self.queue[0]
+                occupancy = self.kv_occupancy_bytes()
+                need = self.kv_request_bytes(len(head.prompt),
+                                             head.max_new_tokens)
+                # Bytes-based cap: admission tightens as occupancy grows.
+                # An empty batch always admits (no head-of-line deadlock
+                # when one request alone exceeds the budget).
+                if occupancy and occupancy + need > self.kv_budget_bytes:
+                    return
                 req = self.queue.popleft()
                 caches1, _, first = self._prefill_single(req)
                 for li in range(len(mb.caches)):
@@ -379,7 +466,69 @@ class AFDServeEngine:
                 self.stats.tokens_out += 1
                 self._w_tokens_out += 1
                 self._w_admitted += 1
-                req.t_first = self.now   # first token exists after prefill
+                if req.t_first < 0:      # first token exists after prefill;
+                    req.t_first = self.now   # re-admissions keep the
+                # original timestamp so TTFT/TPOT span outages (fleet
+                # requeue-after-failure accounting stays honest)
+
+    # ---- fault tolerance / fleet drain hooks -------------------------------
+
+    def _drain_slot(self, mb: _MicroBatch, slot: int) -> Optional[ServeRequest]:
+        """Evict one slot: the request (if live) restarts generation on
+        re-admission but keeps its ``t_arrive``/``t_first`` timestamps."""
+        req = mb.slots[slot]
+        if req is not None:
+            req.output.clear()
+        mb.slots[slot] = None
+        mb.tokens[slot] = PAD
+        mb.pos = mb.pos.at[slot].set(0)
+        return req
+
+    def simulate_failure(self, frac_nodes_lost: float,
+                         replan=None) -> int:
+        """Fail ``frac_nodes_lost`` of this replica's capacity.
+
+        Same partial-drain semantics as ``DecodeEngine.simulate_failure``
+        (shared ``failure_drain_count`` helper): exactly ``ceil(frac ·
+        total_slots)`` slots — the lowest (micro-batch, slot) indices —
+        drain their in-flight requests back to the local queue; survivors
+        keep their caches and timestamps. Returns the requeue count.
+        """
+        n_drain = failure_drain_count(frac_nodes_lost, self.total_slots)
+        requeued = 0
+        for k in range(n_drain):
+            mb = self.mbs[k // self.mb_slots]
+            req = self._drain_slot(mb, k % self.mb_slots)
+            if req is not None:
+                self.queue.appendleft(req)
+                requeued += 1
+        self.stats.requeued += requeued
+        self.stats.replans += 1
+        if replan is not None:
+            replan(1.0 - frac_nodes_lost)
+        return requeued
+
+    def drain_all(self) -> List[ServeRequest]:
+        """Evacuate the replica (fleet failure path): every in-flight and
+        queued request leaves the engine, in slot order then arrival order,
+        with timestamps intact so the fleet can requeue them elsewhere."""
+        out: List[ServeRequest] = []
+        for mb in self.mbs:
+            for slot in range(self.mb_slots):
+                req = self._drain_slot(mb, slot)
+                if req is not None:
+                    out.append(req)
+        out.extend(self.queue)
+        self.queue.clear()
+        self.stats.requeued += len(out)
+        return out
+
+    def resubmit(self, req: ServeRequest) -> None:
+        """Fleet re-admission of a drained request: generation restarts,
+        but ``t_arrive``/``t_first`` are preserved (TTFT spans the
+        outage — `_admit` only stamps ``t_first`` when still unset)."""
+        req.output.clear()
+        self.queue.append(req)
 
     # ---- the decode tick ---------------------------------------------------
 
@@ -471,6 +620,9 @@ class AFDServeEngine:
             "tpot_mean": (float(np.mean([r.tpot for r in done]))
                           if done else None),
             "windows": len(self.windows),
+            "requeued": self.stats.requeued,
+            "kv_occupancy_bytes": self.kv_occupancy_bytes(),
+            "kv_budget_bytes": self.kv_budget_bytes,
             "bytes_match_all": all(w.bytes_match for w in self.windows),
             "dispatch_bytes": self.rt.stats.dispatch_bytes,
             "combine_bytes": self.rt.stats.combine_bytes,

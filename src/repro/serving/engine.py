@@ -32,6 +32,20 @@ from repro.models.model import Model
 PAD = 0
 
 
+def failure_drain_count(frac_nodes_lost: float, n_slots: int) -> int:
+    """Slots to drain when ``frac_nodes_lost`` of capacity fails.
+
+    Exactly ``ceil(frac · n_slots)`` (clamped to ``n_slots``): the lowest
+    slot indices stand in for the failed nodes, survivors keep decoding.
+    Shared by ``DecodeEngine`` and ``AFDServeEngine`` so both engines (and
+    the fleet layer built on them) agree on partial-drain semantics.
+    """
+    if not 0.0 <= frac_nodes_lost <= 1.0:
+        raise ValueError(
+            f"frac_nodes_lost must be in [0, 1], got {frac_nodes_lost}")
+    return min(n_slots, math.ceil(frac_nodes_lost * n_slots - 1e-12))
+
+
 def splice_batch_slot(dst_tree, src_tree, slot: int, n_slots: int):
     """Write a 1-sequence cache pytree into batch position ``slot``.
 
@@ -191,11 +205,7 @@ class DecodeEngine:
         requests. ``replan`` receives the surviving-capacity fraction (the
         scheduler hooks the AFD planner's discrete rescale here).
         """
-        if not 0.0 <= frac_nodes_lost <= 1.0:
-            raise ValueError(
-                f"frac_nodes_lost must be in [0, 1], got {frac_nodes_lost}")
-        n_drain = min(self.n_slots,
-                      math.ceil(frac_nodes_lost * self.n_slots - 1e-12))
+        n_drain = failure_drain_count(frac_nodes_lost, self.n_slots)
         requeued = 0
         for i in range(n_drain):
             req = self.slots[i]

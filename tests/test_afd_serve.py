@@ -176,3 +176,97 @@ def test_tokens_out_counts_prefill_first_token(afd_setup):
              for i in range(3)]
     eng.run(trace, max_ticks=500)
     assert eng.stats.tokens_out == 3 * 4
+
+
+# ---- fleet hooks: KV-byte admission, failure drain, requeue ---------------
+
+def test_kv_admission_tightens_with_occupancy(afd_setup):
+    """Bytes-based admission: with a budget worth two requests, the third
+    waits in queue until occupancy falls — the default budget admits all."""
+    probe_eng = make_engine(afd_setup)
+    need = probe_eng.kv_request_bytes(3, 4)
+
+    tight = make_engine(afd_setup, kv_budget_bytes=2 * need)
+    for i in range(4):
+        tight.submit(ArrivalEvent(rid=i, t=0.0, prompt_len=3,
+                                  max_new_tokens=4))
+    tight.tick()
+    assert tight.live_count() == 2          # slots exist, bytes don't
+    assert len(tight.queue) == 2
+    assert tight.kv_occupancy_bytes() + need > tight.kv_budget_bytes
+
+    loose = make_engine(afd_setup)          # default: total_slots * slot cap
+    for i in range(4):
+        loose.submit(ArrivalEvent(rid=i, t=0.0, prompt_len=3,
+                                  max_new_tokens=4))
+    loose.tick()
+    assert loose.live_count() == 4
+
+    # as requests complete, occupancy falls and the queue drains fully
+    tight.run([], max_ticks=2000)
+    assert tight.stats.completed == 4
+    assert tight.kv_occupancy_bytes() == 0
+
+
+def test_kv_admission_never_deadlocks_on_oversized_request(afd_setup):
+    """One request alone over budget still admits into an empty batch."""
+    eng = make_engine(afd_setup, kv_budget_bytes=1)
+    eng.run([ArrivalEvent(rid=0, t=0.0, prompt_len=3, max_new_tokens=4)],
+            max_ticks=500)
+    assert eng.stats.completed == 1
+
+
+def test_simulate_failure_parity_with_decode_engine(afd_setup):
+    """Both engines share failure_drain_count: exactly ceil(frac · slots)
+    lowest-indexed slots drain to the local queue; survivors keep their
+    caches, output progress, and timestamps."""
+    from repro.serving.engine import failure_drain_count
+
+    eng = make_engine(afd_setup)            # 2 micro-batches x 2 slots
+    for i in range(6):
+        eng.submit(ArrivalEvent(rid=i, t=0.0, prompt_len=2,
+                                max_new_tokens=8))
+    eng.tick()
+    assert eng.live_count() == 4
+    t_first = {r.rid: r.t_first for r in eng.live_requests()}
+
+    n = eng.simulate_failure(0.5)
+    assert n == failure_drain_count(0.5, eng.total_slots) == 2
+    assert eng.stats.requeued == 2
+    assert eng.live_count() == 2
+    drained = [eng.queue[0], eng.queue[1]]  # appendleft: head of the queue
+    assert sorted(r.rid for r in drained) == [0, 1]
+    for r in drained:
+        assert not r.output                 # generation restarts...
+        assert r.t_first == t_first[r.rid] >= 0   # ...timestamps don't
+    survivors = eng.live_requests()
+    assert sorted(r.rid for r in survivors) == [2, 3]
+    assert all(r.output for r in survivors)
+
+    # edge cases go through the same shared helper
+    assert failure_drain_count(0.0, 4) == 0
+    assert failure_drain_count(0.25, 4) == 1
+    assert failure_drain_count(1.0, 4) == 4
+
+
+def test_requeue_after_failure_preserves_ttft_start(afd_setup):
+    """A drained request re-admitted after the outage completes with its
+    original t_first — TTFT spans the failure, not the restart."""
+    eng = make_engine(afd_setup)
+    for i in range(4):
+        eng.submit(ArrivalEvent(rid=i, t=0.0, prompt_len=2,
+                                max_new_tokens=12))
+    for _ in range(3):
+        eng.tick()
+    victim = eng.mbs[0].slots[0]
+    t0 = victim.t_first
+    assert t0 >= 0
+    t_fail = eng.now
+
+    eng.simulate_failure(0.5)
+    eng.run([], max_ticks=2000)
+    assert eng.stats.completed == 4
+    done = {r.rid: r for r in eng.completed}
+    assert done[victim.rid].t_first == t0   # preserved across the requeue
+    assert done[victim.rid].t_done > t_fail
+    assert done[victim.rid].ttft == t0 - done[victim.rid].t_arrive

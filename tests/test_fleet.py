@@ -1,0 +1,227 @@
+"""Fleet layer: deterministic routing policies, the elastic N_F rescaler
+closed loop, and the multi-replica controller end-to-end (heterogeneous
+shapes, zero-loss failure drain, per-replica byte exactness)."""
+
+import collections
+
+import jax
+import pytest
+
+from repro import configs
+from repro.api import registry
+from repro.core import planner as pln
+from repro.fleet.events import FailureEvent
+from repro.fleet.rescaler import ElasticRescaler
+from repro.fleet.router import (ReplicaView, RouteRequest, get_policy,
+                                list_policies)
+from repro.models.model import make_model
+from repro.parallel.afd import AFDRuntime
+from repro.serving.afd_engine import AFDServeEngine
+from repro.serving.workload import ArrivalEvent, generate_trace, get_profile
+
+
+# ---- router policies (pure, jax-free) -------------------------------------
+
+def mkview(i, **kw):
+    base = dict(index=i, name=f"replica{i}", queue_len=0, live=0,
+                total_slots=4, kv_occupancy_bytes=0, kv_budget_bytes=1 << 30,
+                queued_kv_bytes=0, queued_prompt_tokens=0,
+                queued_pending_tokens=0, tick_seconds=0.01)
+    base.update(kw)
+    return ReplicaView(**base)
+
+
+RR = RouteRequest(rid=0, t=0.0, prompt_len=4, max_new_tokens=8)
+
+
+def test_round_robin_cycles_over_healthy():
+    pol = get_policy("round-robin")
+    views = [mkview(0), mkview(2), mkview(5)]   # fleet indices with gaps
+    assert [pol.choose(RR, views) for _ in range(5)] == [0, 2, 5, 0, 2]
+
+
+def test_least_kv_picks_min_commitment_ties_to_low_index():
+    pol = get_policy("least-kv")
+    views = [mkview(0, kv_occupancy_bytes=100, queued_kv_bytes=50),
+             mkview(1, kv_occupancy_bytes=100),
+             mkview(2, kv_occupancy_bytes=60, queued_kv_bytes=40)]
+    assert pol.choose(RR, views) == 1       # 100 < 150, tie broken vs 2
+    views[1] = mkview(1, kv_occupancy_bytes=100, queued_kv_bytes=0)
+    views[2] = mkview(2, kv_occupancy_bytes=100, queued_kv_bytes=0)
+    assert pol.choose(RR, views) == 1       # exact tie: lowest index
+
+
+def test_predicted_ttft_prefers_idle_over_backlogged():
+    pol = get_policy("predicted-ttft")
+    idle = mkview(0)
+    backlogged = mkview(1, live=4, queue_len=3, queued_prompt_tokens=12)
+    assert pol.choose(RR, [backlogged, idle]) == 0
+    # prefill work alone also repels: queued prompts serialize ahead
+    prompty = mkview(2, queued_prompt_tokens=100)
+    assert pol.choose(RR, [prompty, idle]) == 0
+
+
+def test_router_registry():
+    assert list_policies() == ["least-kv", "predicted-ttft", "round-robin"]
+    with pytest.raises(KeyError):
+        get_policy("no-such-policy")
+    assert registry.list_routers() == list_policies()
+
+
+# ---- elastic rescaler closed loop (planner-only, jax-free) ----------------
+
+def test_rescaler_closed_loop_agrees_with_planner():
+    spec = registry.resolve_model("DeepSeek-V3")
+    hw = registry.resolve_hardware("H800")
+    r = ElasticRescaler(spec, hw)
+    n0 = r.n_f
+
+    ev = r.observe(0, 0.0, 2.0)             # demand doubles
+    assert ev is not None and ev.old_n_f == n0 and ev.new_n_f == 2 * n0
+    # the event carries everything needed to recompute the §3.3 decision
+    dec = pln.rescale_n_f(pln.plan_afd(spec, hw, n_f=ev.old_n_f),
+                          ev.sigma, ev.threshold)
+    assert dec.triggered and dec.new_n_f == ev.new_n_f
+    assert ev.penalty > ev.threshold >= ev.residual_penalty
+
+    # demand-tracking, not compounding: the same deployed-σ re-observed
+    # is now inside the new plan's dead zone — no further event
+    assert r.observe(1, 0.1, 2.0) is None
+    assert r.n_f == 2 * n0
+
+    # demand returns to baseline → scale back down to the original N_F
+    ev2 = r.observe(2, 0.2, 1.0)
+    assert ev2 is not None and ev2.new_n_f == n0
+    assert r.n_f == n0
+
+
+def test_rescaler_dead_zone_and_idle_windows():
+    spec = registry.resolve_model("DeepSeek-V3")
+    hw = registry.resolve_hardware("H800")
+    r = ElasticRescaler(spec, hw)
+    n0 = r.n_f
+    assert r.observe(0, 0.0, 0.0) is None   # idle: nothing to price
+    # tiny imbalance stays inside the dead zone (penalty < 0.25/(n_f+1))
+    assert r.observe(1, 0.1, 1.0 + 0.05 / n0) is None
+    assert r.n_f == n0 and len(r.decisions) == 1
+
+
+def test_rescaler_cooldown_suppresses_back_to_back_replans():
+    spec = registry.resolve_model("DeepSeek-V3")
+    hw = registry.resolve_hardware("H800")
+    r = ElasticRescaler(spec, hw, cooldown_windows=2)
+    n0 = r.n_f
+    assert r.observe(0, 0.0, 3.0) is not None
+    assert r.observe(1, 0.1, 1.0) is None   # would trigger, but cooling down
+    assert r.observe(2, 0.2, 1.0) is None
+    assert r.observe(3, 0.3, 1.0) is not None
+    assert r.n_f == n0
+
+
+# ---- fleet controller end-to-end (jax) ------------------------------------
+
+@pytest.fixture(scope="module")
+def fleet_setup():
+    cfg = configs.get_smoke_config("granite-moe-1b-a400m")
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def make_fleet(fleet_setup, shapes, **kw):
+    from repro.fleet.controller import FleetController
+    cfg, params = fleet_setup
+    devs = jax.devices()
+    engines = []
+    for bo, slots in shapes:
+        rt = AFDRuntime(cfg, params, [devs[0]], [devs[-1]])
+        engines.append(AFDServeEngine(rt, max_len=32, n_bo=bo,
+                                      mb_slots=slots, tick_seconds=0.01,
+                                      window_ticks=8))
+    return FleetController(engines, **kw)
+
+
+def test_fleet_requires_shared_virtual_clock(fleet_setup):
+    from repro.fleet.controller import FleetController
+    cfg, params = fleet_setup
+    devs = jax.devices()
+    rts = [AFDRuntime(cfg, params, [devs[0]], [devs[-1]]) for _ in range(2)]
+    engines = [AFDServeEngine(rts[0], tick_seconds=0.01),
+               AFDServeEngine(rts[1], tick_seconds=0.02)]
+    with pytest.raises(ValueError, match="tick_seconds"):
+        FleetController(engines)
+
+
+def test_heterogeneous_fleet_completes_and_bytes_match(fleet_setup):
+    """PD+AFD shape mix: replicas with different n_bo × mb_slots serve one
+    queue; every fleet window's per-replica bytes match the Eq. 9/17
+    prediction exactly."""
+    fleet = make_fleet(fleet_setup, [(1, 2), (2, 2)], router="round-robin")
+    trace = generate_trace(get_profile("poisson-steady"), seed=3,
+                           max_requests=10)
+    windows = fleet.run(trace, max_ticks=3000)
+    s = fleet.summary()
+    assert s["completed"] == s["arrivals"] == 10 and s["lost"] == 0
+    assert all(r.dispatched > 0 for r in fleet.replicas)
+    assert windows and all(w.bytes_match for w in windows)
+    for w in windows:
+        for pr in w.per_replica:
+            assert pr["dispatch_bytes"] == pr["predicted_dispatch_bytes"]
+            assert pr["combine_bytes"] == pr["predicted_combine_bytes"]
+
+
+def test_fleet_routing_deterministic_under_fixed_seed(fleet_setup):
+    def run():
+        fleet = make_fleet(fleet_setup, [(1, 2)] * 3, router="least-kv")
+        trace = generate_trace(get_profile("poisson-burst"), seed=0,
+                               max_requests=12)
+        ws = fleet.run(trace, max_ticks=3000)
+        return ([(w.arrivals, w.completed, w.tokens_out, w.ttft_p95,
+                  tuple(pr["dispatched"] for pr in w.per_replica))
+                 for w in ws],
+                [r.dispatched for r in fleet.replicas],
+                sorted((r.rid, tuple(r.output))
+                       for r in fleet.completed_requests()))
+
+    assert run() == run()
+
+
+def test_fatal_failure_requeues_survivors_zero_lost(fleet_setup):
+    """Mid-run replica loss: drained requests land on healthy replicas
+    with their original t_first, and the fleet completes everything."""
+    fleet = make_fleet(fleet_setup, [(1, 2)] * 3, router="round-robin")
+    trace = [ArrivalEvent(rid=i, t=0.0, prompt_len=2, max_new_tokens=16)
+             for i in range(12)]
+    fleet.trace = collections.deque(trace)
+    fleet.arrivals = len(trace)
+    for _ in range(20):
+        fleet.step()
+    victim = fleet.replicas[1]
+    started = {r.rid: r.t_first for r in victim.engine.live_requests()}
+    n_victim = len(victim.engine.live_requests()) + len(victim.engine.queue)
+    assert started and all(t >= 0 for t in started.values())
+
+    rec = fleet.inject_failure(FailureEvent(t=fleet.now, replica=1))
+    assert rec.fatal and rec.requeued == n_victim
+    assert not victim.healthy
+    assert victim.engine.live_count() == 0 and not victim.engine.queue
+    assert sum(r.requeued_in for r in fleet.replicas) == n_victim
+
+    fleet.run([], max_ticks=5000)
+    s = fleet.summary()
+    assert s["completed"] == 12 and s["lost"] == 0
+    assert s["requeued"] == n_victim
+    done = {r.rid: r for r in fleet.completed_requests()}
+    for rid, t0 in started.items():
+        # TTFT spans the outage: the original first-token stamp survives
+        assert done[rid].t_first == t0
+        assert done[rid].t_done > fleet.drains[0].t
+    assert all(w.bytes_match for w in fleet.windows)
+
+
+def test_failure_on_unhealthy_replica_is_inert(fleet_setup):
+    fleet = make_fleet(fleet_setup, [(1, 2)] * 2)
+    fleet.inject_failure(FailureEvent(t=0.0, replica=0))
+    rec = fleet.inject_failure(FailureEvent(t=0.0, replica=0))
+    assert rec.requeued == 0 and rec.fatal
+    assert len(fleet.healthy()) == 1
