@@ -1,0 +1,66 @@
+"""Provision smoke — the AFD-vs-EP search on the paper's headline pair,
+locked down in the golden gate.
+
+A deliberately small grid (DeepSeek-V3 on H800 + GB200, default scenario,
+N_F 1..40, two slack values = 160 points) so the benchmark runs in
+milliseconds, yet it pins the subsystem's acceptance behaviors:
+
+  * the streamed search prices every point and the counters add up;
+  * the Pareto frontier head (best HFU_eff point) is exact;
+  * the two headline verdicts reproduce the paper: DeepSeek-V3 on H800
+    sits in the §3.2 dead zone (stay-ep), the Appendix-A GB200 superpod
+    escapes it (deploy-afd);
+  * the EP baselines carry the Eq. 12 penalty at σ=0.8, λ=3.
+
+Everything is analytic numpy — no jax, no randomness, no wall-clock in
+the derived columns — so every value is byte-deterministic.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.provision import default_grid, recommend, search
+
+MODEL = "DeepSeek-V3"
+HARDWARE = ["H800", "GB200"]
+N_F_MAX = 40
+
+
+def main() -> None:
+    grid = default_grid(models=[MODEL], hardware=HARDWARE,
+                        scenarios=["default"], n_f_max=N_F_MAX,
+                        bw_scale=[1.0], b_cap=[float("inf")])
+    t0 = time.perf_counter()
+    res = search(grid)
+    wall_us = (time.perf_counter() - t0) * 1e6
+
+    best = res.frontier[0]
+    v = {hw: recommend(res, MODEL, hw) for hw in HARDWARE}
+    ep = res.ep[f"{MODEL}|H800"]
+
+    print("name,us_per_call,derived")
+    print(f"provision_search,{wall_us:.0f},"
+          f"points={res.points};eligible={res.eligible};"
+          f"frontier={len(res.frontier)};tiles={res.tiles};"
+          f"hbm_infeasible={res.counters['hbm_infeasible']};"
+          f"slo_exceeded={res.counters['slo_exceeded']}")
+    print(f"provision_frontier_head,0,"
+          f"model={best['model']};hardware={best['hardware']};"
+          f"n_f={best['n_f']};n_a={best['n_a']};"
+          f"hfu_eff={best['hfu_eff']:.6f};slack={best['slack_frac']:.6f};"
+          f"cost_per_mtok={best['cost_per_mtok']:.4f};"
+          f"regime={best['regime']}")
+    print(f"provision_ep_baseline,0,"
+          f"sigma={ep['sigma']};ep_lambda={ep['ep_lambda']};"
+          f"hfu_eff={ep['hfu_eff']:.6f}")
+    for hw in HARDWARE:
+        verdict = v[hw]
+        print(f"provision_verdict_{hw.lower()},0,"
+              f"decision={verdict.decision};"
+              f"hfu_margin={verdict.hfu_margin:.6f};"
+              f"n_f={verdict.afd['n_f'] if verdict.afd else '-'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,7 @@ MODULES = [
     "benchmarks.appendixA_superpod",
     "benchmarks.afd_vs_ep_system",
     "benchmarks.ablation_overlap_capacity",
+    "benchmarks.provision_smoke",
     "benchmarks.serve_traffic_smoke",
     "benchmarks.fleet_smoke",
 ]

@@ -5,25 +5,34 @@ Public surface:
     planner / roofline / imbalance analytics.
   * :func:`sweep` / :func:`run_named_sweep` — vectorized grid evaluation of
     the §3 hot path (thousands of points in one numpy shot).
+  * :func:`sweep_tiles` / :class:`GridSpec` — the streaming tile core under
+    ``sweep``: memory-bounded evaluation of million-point grids, optionally
+    sharded across worker processes (the ``repro.provision`` search rides
+    on this).
   * :class:`Record` — JSON-serializable results.
   * ``registry`` — name resolution for models / hardware / scenarios /
     named sweeps (auto-discovers ``repro.configs`` architectures).
 
-CLI: ``python -m repro {plan,sweep,bench,list}``.
+CLI: ``python -m repro {plan,sweep,bench,provision,list}``.
 """
 
 from repro.api import registry
 from repro.api.deployment import Deployment
 from repro.api.records import Record, dump_records, load_records
-from repro.api.sweep import (SweepResult, run_named_sweep, scalar_reference,
-                             sweep)
+from repro.api.sweep import (GridSpec, SweepResult, SweepTile,
+                             resolve_grid, run_named_sweep,
+                             scalar_reference, sweep, sweep_tiles,
+                             tile_footprint_bytes, tile_spans,
+                             tiles_from_grid)
 
 list_models = registry.list_models
 list_hardware = registry.list_hardware
 list_sweeps = registry.list_sweeps
 
 __all__ = [
-    "Deployment", "Record", "SweepResult", "dump_records", "load_records",
-    "registry", "run_named_sweep", "scalar_reference", "sweep",
+    "Deployment", "GridSpec", "Record", "SweepResult", "SweepTile",
+    "dump_records", "load_records", "registry", "resolve_grid",
+    "run_named_sweep", "scalar_reference", "sweep", "sweep_tiles",
+    "tile_footprint_bytes", "tile_spans", "tiles_from_grid",
     "list_models", "list_hardware", "list_sweeps",
 ]

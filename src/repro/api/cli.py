@@ -4,16 +4,19 @@ Subcommands:
   plan          — run the §4 planner for one (model, hardware, scenario).
   sweep         — vectorized §3 grid (named sweep or explicit axes).
   bench         — scalar-loop vs vectorized-sweep equivalence + speedup.
+  provision     — million-point AFD-vs-EP search: streams the tiled sweep,
+                  prices every point (HFU_eff, latency slack, $/Mtok),
+                  keeps the Pareto frontier, emits deploy verdicts.
   serve-traffic — two-role AFD serving engine under a stochastic trace.
   serve-fleet   — multi-replica fleet: routed traffic, KV-aware balancing,
                   failure drain/requeue, elastic N_F rescale.
   list          — registry contents (models, hardware, scenarios, sweeps,
                   traffic profiles, fleet router policies).
 
-Analysis subcommands import no jax, so the CLI starts in milliseconds
-and runs anywhere; ``serve-traffic`` is the exception — it lowers a
-smoke-scale architecture onto the two-role AFD runtime (jax imported
-lazily inside the command).
+Analysis subcommands import no jax, so the CLI starts in milliseconds and
+runs anywhere; ``serve-traffic``/``serve-fleet`` are the exception — they
+lower a smoke-scale architecture onto the two-role AFD runtime (jax
+imported lazily inside the command), as does ``provision --calibrate``.
 """
 
 from __future__ import annotations
@@ -55,8 +58,8 @@ def cmd_list(args) -> int:
             hw = registry.resolve_hardware(h)
             pod = " superpod" if hw.superpod else ""
             print(f"  {h:8s} peak={hw.peak_flops/1e12:6.0f}T "
-                  f"hbm={hw.hbm_bw/1e12:.2f}TB/s cap={hw.hbm_cap/1e9:.0f}GB"
-                  f"{pod}")
+                  f"hbm={hw.hbm_bw/1e12:.2f}TB/s cap={hw.hbm_cap/1e9:.0f}GB "
+                  f"${hw.cost_per_device_hour:.1f}/chip-h{pod}")
     if kind in ("scenarios", "all"):
         print("scenarios:")
         for s, scen in sorted(registry.SCENARIOS.items()):
@@ -206,6 +209,123 @@ def cmd_bench(args) -> int:
 
 def _nan_mask(a: np.ndarray) -> np.ndarray:
     return (a != a) if a.dtype.kind == "f" else np.zeros(a.shape, bool)
+
+
+def _parse_costs(specs: Optional[List[str]]) -> dict:
+    """Parse repeated ``--cost HW=PRICE`` into {name: $/chip-hour}."""
+    out = {}
+    for spec in specs or []:
+        name, sep, price = spec.partition("=")
+        if not sep:
+            raise ValueError(f"bad --cost {spec!r}; want HW=PRICE, "
+                             "e.g. --cost H800=2.4")
+        out[name.strip()] = float(price)
+    return out
+
+
+def _parse_targets(specs: Optional[List[str]], grid, scenario: str):
+    """Parse ``--target MODEL:HW[:SCENARIO]`` triples (default: every
+    model × hardware pair in the grid at the verdict scenario)."""
+    if specs:
+        triples = []
+        for spec in specs:
+            parts = spec.split(":")
+            if len(parts) not in (2, 3):
+                raise ValueError(f"bad --target {spec!r}; "
+                                 "want MODEL:HW[:SCENARIO]")
+            triples.append((parts[0], parts[1],
+                            parts[2] if len(parts) == 3 else scenario))
+        return triples
+    return [(m.name, h.name, scenario)
+            for m in grid.spec.models if m.is_moe
+            for h in grid.spec.hardware]
+
+
+def cmd_provision(args) -> int:
+    from repro.provision import default_grid, recommend, search
+
+    kwargs = dict(cost_overrides=_parse_costs(args.cost),
+                  sigma=args.sigma, ep_lambda=args.lambda_ep,
+                  n_f_max=args.n_f_max)
+    if args.models:
+        kwargs["models"] = _split(args.models)
+    if args.hardware:
+        kwargs["hardware"] = _split(args.hardware)
+    if args.scenarios:
+        kwargs["scenarios"] = _split(args.scenarios)
+    if args.bw_scale:
+        kwargs["bw_scale"] = _floats(args.bw_scale)
+    if args.b_cap:
+        kwargs["b_cap"] = _floats(args.b_cap)
+    if args.n_a_slack:
+        kwargs["n_a_slack"] = [int(s) for s in _split(args.n_a_slack)]
+    grid = default_grid(**kwargs)
+
+    from repro.api.sweep import DEFAULT_TILE_POINTS
+    t0 = time.perf_counter()
+    res = search(grid, tile_points=args.tile_points or DEFAULT_TILE_POINTS,
+                 processes=args.processes)
+    wall = time.perf_counter() - t0
+
+    calibration = None
+    scale = 1.0
+    if args.calibrate:
+        from repro.provision import calibrate
+        rep = calibrate()
+        calibration = rep.to_obj()
+        scale = rep.scale
+
+    scen_names = grid.spec.scenario_names
+    verdict_scen = (args.scenario if args.scenario in scen_names
+                    else scen_names[0])
+    targets = _parse_targets(args.target, grid, verdict_scen)
+    verdicts = [recommend(res, m, h, s, calibration_scale=scale)
+                for m, h, s in targets]
+
+    doc = {"grid": {"points": grid.points, "shape": list(grid.spec.shape),
+                    "n_a_slack": list(grid.n_a_slack),
+                    "sigma": grid.sigma, "ep_lambda": grid.ep_lambda,
+                    "cost_overrides": dict(grid.cost_overrides)},
+           "result": res.to_obj(),
+           "verdicts": [v.to_obj() for v in verdicts],
+           "calibration": calibration,
+           "wall_s": wall}
+    if args.json:
+        payload = json.dumps(doc, indent=2, sort_keys=True, default=float)
+        if args.json == "-":
+            print(payload)
+        else:
+            with open(args.json, "w") as fh:
+                fh.write(payload + "\n")
+    if args.json != "-":
+        print(f"# provision: {grid.points} points "
+              f"({'x'.join(str(d) for d in grid.spec.shape)} grid "
+              f"x {len(grid.n_a_slack)} slack) in {wall:.1f}s, "
+              f"{res.tiles} tiles")
+        print(f"# eligible={res.eligible} frontier={len(res.frontier)} "
+              f"counters={res.counters}")
+        if calibration:
+            print(f"# calibration: measured/predicted HFU scale "
+                  f"{scale:.4f} over {calibration['windows']} windows")
+        print("# Pareto frontier (top rows by HFU_eff):")
+        print("model,hardware,scenario,bw_scale,b_cap,n_f,n_a,"
+              "hfu_eff,slack,cost_per_mtok")
+        for row in res.frontier[:args.top]:
+            cap = "inf" if row["b_cap"] is None else f"{row['b_cap']:g}"
+            print(f"{row['model']},{row['hardware']},{row['scenario']},"
+                  f"{row['bw_scale']:g},{cap},{row['n_f']},{row['n_a']},"
+                  f"{row['hfu_eff']:.4f},{row['slack_frac']:.4f},"
+                  f"{row['cost_per_mtok']:.4f}")
+        print("# verdicts:")
+        for v in verdicts:
+            mark = "✓ AFD" if v.decision == "deploy-afd" else "✗ EP "
+            print(f"  {mark} {v.summary}")
+    if not res.frontier:
+        print("FAIL: no eligible AFD point in the entire grid — the SLO "
+              "is infeasible at every searched configuration",
+              file=sys.stderr)
+        return 3
+    return 0
 
 
 def cmd_serve_traffic(args) -> int:
@@ -529,6 +649,49 @@ def build_parser() -> argparse.ArgumentParser:
                     help="grid is 6 models × 8 platforms × n_f_max points")
     be.add_argument("--repeat", type=int, default=3)
     be.set_defaults(fn=cmd_bench)
+
+    pv = sub.add_parser(
+        "provision",
+        help="million-point AFD-vs-EP search with Pareto frontier + verdict")
+    pv.add_argument("--models", default=None,
+                    help="comma-separated (default: all paper models)")
+    pv.add_argument("--hardware", default=None,
+                    help="comma-separated (default: every registry platform)")
+    pv.add_argument("--scenarios", default=None,
+                    help="comma-separated (default: all named scenarios)")
+    pv.add_argument("--scenario", default="default",
+                    help="scenario the deploy verdicts are stated for")
+    pv.add_argument("--n-f-max", type=int, default=96,
+                    help="FFN-node axis sweeps 1..N_F_MAX")
+    pv.add_argument("--bw-scale", default=None,
+                    help="comma-separated interconnect scale factors")
+    pv.add_argument("--b-cap", default=None,
+                    help="comma-separated per-rank token inflow caps")
+    pv.add_argument("--n-a-slack", default=None,
+                    help="comma-separated extra attention nodes (default 0,1)")
+    pv.add_argument("--sigma", type=float, default=0.8,
+                    help="§3.3 balancedness for the imbalance penalties")
+    pv.add_argument("--lambda-ep", type=float, default=3.0,
+                    help="t_a/t_f assumed for the large-EP reference")
+    pv.add_argument("--tile-points", type=int, default=None,
+                    help="max grid cells evaluated per tile")
+    pv.add_argument("--processes", type=int, default=None,
+                    help="shard tiles across worker processes")
+    pv.add_argument("--cost", action="append", metavar="HW=PRICE",
+                    help="override $/chip-hour (repeatable), "
+                         "e.g. --cost H800=2.4 --cost GB200=9")
+    pv.add_argument("--target", action="append",
+                    metavar="MODEL:HW[:SCENARIO]",
+                    help="emit a deploy verdict for this triple "
+                         "(repeatable; default: every model x hardware)")
+    pv.add_argument("--top", type=int, default=10,
+                    help="frontier rows printed to stdout")
+    pv.add_argument("--calibrate", action="store_true",
+                    help="derate verdicts by the measured/predicted HFU "
+                         "scale from the serving engine (needs jax)")
+    pv.add_argument("--json", default=None, metavar="PATH",
+                    help="write the full search result JSON ('-' for stdout)")
+    pv.set_defaults(fn=cmd_provision)
 
     st = sub.add_parser(
         "serve-traffic",

@@ -19,7 +19,8 @@ the Appendix-A superpod study) as reusable sweep parameter sets consumed by
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Union
+import difflib
+from typing import Dict, Iterable, List, Union
 
 from repro.core.budget import Scenario
 from repro.core.hardware import HARDWARE, HardwareSpec
@@ -28,6 +29,19 @@ from repro.core.modelspec import ALL_MODELS, PAPER_MODELS, MoEModelSpec
 ModelLike = Union[str, MoEModelSpec]
 HardwareLike = Union[str, HardwareSpec]
 ScenarioLike = Union[str, Scenario]
+
+def unknown_name_error(kind: str, name: object,
+                       known: Iterable[str]) -> KeyError:
+    """A helpful lookup error: the full list of known names plus a
+    closest-match suggestion (shared by every registry namespace)."""
+    known = sorted(known)
+    msg = f"unknown {kind} {name!r}; known: {known}"
+    close = difflib.get_close_matches(str(name), known, n=3, cutoff=0.5)
+    if close:
+        hint = " or ".join(repr(c) for c in close)
+        msg += f" — did you mean {hint}?"
+    return KeyError(msg)
+
 
 # --- scenarios -------------------------------------------------------------
 
@@ -49,8 +63,7 @@ def resolve_scenario(scen: ScenarioLike) -> Scenario:
     try:
         return SCENARIOS[scen]
     except KeyError:
-        raise KeyError(
-            f"unknown scenario {scen!r}; known: {sorted(SCENARIOS)}") from None
+        raise unknown_name_error("scenario", scen, SCENARIOS) from None
 
 
 def scenario_name(scen: ScenarioLike) -> str:
@@ -98,9 +111,15 @@ def resolve_model(model: ModelLike) -> MoEModelSpec:
         from repro import configs
         cfg = configs.get_config(model)
     except Exception:
-        raise KeyError(
-            f"unknown model {model!r}; known: {sorted(ALL_MODELS)} "
-            f"(or any repro.configs arch id)") from None
+        names = set(ALL_MODELS)
+        try:
+            from repro import configs
+            names |= set(configs.ARCH_IDS)
+        except Exception:
+            pass
+        err = unknown_name_error("model", model, names)
+        raise KeyError(err.args[0] +
+                       " (any repro.configs arch id also resolves)") from None
     return spec_from_arch_config(cfg)
 
 
@@ -117,9 +136,7 @@ def resolve_hardware(hw: HardwareLike,
         try:
             hw = HARDWARE[hw]
         except KeyError:
-            raise KeyError(
-                f"unknown hardware {hw!r}; known: {sorted(HARDWARE)}"
-            ) from None
+            raise unknown_name_error("hardware", hw, HARDWARE) from None
     if bw_scale != 1.0:
         hw = dataclasses.replace(
             hw,
@@ -138,8 +155,12 @@ def list_hardware() -> List[str]:
 
 def resolve_router(name: str):
     """Resolve a fleet routing policy by name (``repro.fleet.router``)."""
-    from repro.fleet.router import get_policy
-    return get_policy(name)
+    from repro.fleet.router import ROUTER_POLICIES, get_policy
+    try:
+        return get_policy(name)
+    except KeyError:
+        raise unknown_name_error("router policy", name,
+                                 ROUTER_POLICIES) from None
 
 
 def list_routers() -> List[str]:
@@ -175,9 +196,7 @@ def named_sweep(name: str) -> dict:
     try:
         return dict(NAMED_SWEEPS[name])
     except KeyError:
-        raise KeyError(
-            f"unknown sweep {name!r}; known: {sorted(NAMED_SWEEPS)}"
-        ) from None
+        raise unknown_name_error("sweep", name, NAMED_SWEEPS) from None
 
 
 def list_sweeps() -> List[str]:

@@ -11,6 +11,17 @@ mirrors the scalar code *operation by operation* (same association order,
 same guards, same tolerances) so results are **bit-exact** equal to the
 scalar reference; ``tests/test_api.py`` enforces this and the ≥10× speedup.
 
+The evaluation is *streamed*: :func:`sweep_tiles` yields memory-bounded
+rectangular tiles of the grid (at most ``tile_points`` cells of field
+arrays resident per tile), optionally sharded across worker processes
+along the model × hardware axes. :func:`sweep` is a thin concatenating
+wrapper over the tile stream — million-point grids (the
+``repro.provision`` search space) never materialize more than one tile of
+intermediate arrays per worker, while small grids (Fig. 4) still evaluate
+as a single tile with zero overhead. Because every grid cell is an
+independent elementwise computation, the tiling is value-neutral: any
+tile shape produces bit-identical fields.
+
 Axes beyond the paper's Fig. 4 grid:
   * ``bw_scale`` — multiplies both interconnect tiers (link derating /
     upgrade studies, paper footnote 3);
@@ -22,7 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, Iterable, List, Optional, Sequence, Union
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -43,6 +54,19 @@ _BOTTLENECKS = np.array(["compute", "hbm", "interconnect"])
 FIELDS = ("feasible", "b_rank", "local_experts", "tokens_per_expert",
           "intensity", "ofu", "temporal_sparsity", "hfu", "regime",
           "bottleneck", "t_budget")
+
+# Per-cell field bytes: bool + 7×f64 + regime (<U16) + bottleneck (<U12)
+# + t_budget f64. Used by the tile-footprint accounting (and its test).
+FIELD_ITEMSIZES = {
+    "feasible": 1, "b_rank": 8, "local_experts": 8, "tokens_per_expert": 8,
+    "intensity": 8, "ofu": 8, "temporal_sparsity": 8, "hfu": 8,
+    "regime": 4 * 16, "bottleneck": 4 * 12, "t_budget": 8,
+}
+BYTES_PER_CELL = sum(FIELD_ITEMSIZES.values())
+
+# Default tile budget: ≤ 2^16 grid cells of field arrays resident at once
+# (≈ 11 MiB of output fields per tile plus same-order temporaries).
+DEFAULT_TILE_POINTS = 1 << 16
 
 
 def _as_models(models) -> List[MoEModelSpec]:
@@ -159,10 +183,39 @@ def _scenario_names(scenarios) -> tuple:
     return tuple(registry.scenario_name(s) for s in scenarios)
 
 
-def sweep(models, hardware, n_f=None, scenarios="default",
-          bw_scale: Union[float, Sequence[float]] = 1.0,
-          b_cap: Union[None, float, Sequence[float]] = None) -> SweepResult:
-    """Vectorized §3 sweep over the full parameter grid. See module doc."""
+# ---------------------------------------------------------------------------
+# Grid resolution + tiling
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GridSpec:
+    """A fully resolved sweep grid: concrete axis values, no evaluation."""
+    models: tuple                 # MoEModelSpec per P
+    hardware: tuple               # HardwareSpec per Q
+    scenarios: tuple              # Scenario per S
+    scenario_names: tuple
+    bw_scale: np.ndarray          # (L,)
+    b_cap: np.ndarray             # (C,)
+    n_f: np.ndarray               # (N,)
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return (len(self.models), len(self.hardware), len(self.scenarios),
+                len(self.bw_scale), len(self.b_cap), len(self.n_f))
+
+    @property
+    def size(self) -> int:
+        s = 1
+        for d in self.shape:
+            s *= d
+        return s
+
+
+def resolve_grid(models, hardware, n_f=None, scenarios="default",
+                 bw_scale: Union[float, Sequence[float]] = 1.0,
+                 b_cap: Union[None, float, Sequence[float]] = None
+                 ) -> GridSpec:
+    """Resolve names → specs and validate the axis arrays (no evaluation)."""
     models = _as_models(models)
     hardware = _as_hardware(hardware)
     scens = _as_scenarios(scenarios)
@@ -177,6 +230,81 @@ def sweep(models, hardware, n_f=None, scenarios="default",
     cap = (np.array([np.inf])
            if b_cap is None
            else np.atleast_1d(np.asarray(b_cap, dtype=np.float64)))
+    return GridSpec(models=tuple(models), hardware=tuple(hardware),
+                    scenarios=tuple(scens), scenario_names=scen_names,
+                    bw_scale=bw, b_cap=cap, n_f=nf)
+
+
+def tile_spans(shape: Sequence[int],
+               tile_points: int = DEFAULT_TILE_POINTS
+               ) -> List[Tuple[Tuple[int, ...], Tuple[int, ...]]]:
+    """Partition a 6-D grid into rectangular (offsets, tile_shape) spans.
+
+    Chunk sizes grow innermost-axis-first (N_F, then b_cap, bw_scale,
+    scenario, hardware, model) so small grids stay a single tile while the
+    per-tile cell count never exceeds ``tile_points``. Pure shape
+    accounting — the memory-regression test calls this on 10^6-point grids
+    without evaluating anything.
+    """
+    if len(shape) != 6:
+        raise ValueError(f"expected a 6-axis grid shape, got {shape}")
+    # Greedy innermost-first chunking: the running ``rem`` budget guarantees
+    # prod(chunks) ≤ tile_points (each step divides the remainder).
+    rem = max(1, int(tile_points))
+    chunks = [1] * 6
+    for ax in range(5, -1, -1):
+        chunks[ax] = max(1, min(int(shape[ax]), rem))
+        rem = max(1, rem // chunks[ax])
+    spans = []
+    starts = [range(0, shape[ax], chunks[ax]) for ax in range(6)]
+    for offsets in itertools.product(*starts):
+        tshape = tuple(min(chunks[ax], shape[ax] - offsets[ax])
+                       for ax in range(6))
+        spans.append((offsets, tshape))
+    return spans
+
+
+def tile_footprint_bytes(tile_shape: Sequence[int]) -> int:
+    """Resident field-array bytes of one evaluated tile (output fields)."""
+    cells = 1
+    for d in tile_shape:
+        cells *= d
+    return cells * BYTES_PER_CELL
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepTile:
+    """One evaluated rectangular block of the sweep grid."""
+    offsets: Tuple[int, ...]      # start index per axis in the full grid
+    shape: Tuple[int, ...]        # tile extent per axis
+    fields: Dict[str, np.ndarray]
+
+    @property
+    def size(self) -> int:
+        return int(self.fields["hfu"].size)
+
+    @property
+    def slices(self) -> Tuple[slice, ...]:
+        return tuple(slice(o, o + s) for o, s in zip(self.offsets,
+                                                     self.shape))
+
+
+def _evaluate_span(spec: GridSpec, offsets: Sequence[int],
+                   tshape: Sequence[int]) -> Dict[str, np.ndarray]:
+    """Evaluate one rectangular span of the grid (the §3 kernel).
+
+    This is byte-for-byte the operation order of the scalar core
+    (``hfu_bound.hfu_point``), applied to broadcast parameter arrays; the
+    equivalence tests in tests/test_api.py hold for any span shape.
+    """
+    i0, j0, k0, l0, c0, n0 = offsets
+    P, Q, S, L, C, N = tshape
+    models = spec.models[i0:i0 + P]
+    hardware = spec.hardware[j0:j0 + Q]
+    scens = spec.scenarios[k0:k0 + S]
+    bw = spec.bw_scale[l0:l0 + L]
+    cap = spec.b_cap[c0:c0 + C]
+    nf = spec.n_f[n0:n0 + N]
 
     # Axis parameter arrays, broadcast to (P, Q, S, L, C, N).
     def ax(vals, axis, dtype):
@@ -280,7 +408,7 @@ def sweep(models, hardware, n_f=None, scenarios="default",
 
     shape = np.broadcast_shapes(hfu.shape)
     full = lambda a: np.broadcast_to(a, shape).copy() if a.shape != shape else a
-    fields = {
+    return {
         "feasible": full(np.asarray(feasible)),
         "b_rank": full(b_rank),
         "local_experts": full(g_local),
@@ -293,9 +421,92 @@ def sweep(models, hardware, n_f=None, scenarios="default",
         "bottleneck": full(bottleneck),
         "t_budget": full(np.broadcast_to(t_b, shape).copy()),
     }
-    return SweepResult(models=tuple(models), hardware=tuple(hardware),
-                       scenarios=tuple(scens), scenario_names=scen_names,
-                       bw_scale=bw, b_cap=cap, n_f=nf, fields=fields)
+
+
+# --- multiprocess sharding -------------------------------------------------
+# Workers inherit the resolved GridSpec via the pool initializer (fork),
+# so per-task payloads are just (offsets, shape) tuples and the results
+# stream back in deterministic task order through imap.
+
+_WORKER_SPEC: Optional[GridSpec] = None
+
+
+def _init_worker(spec: GridSpec) -> None:
+    global _WORKER_SPEC
+    _WORKER_SPEC = spec
+
+
+def _worker_eval(span):
+    offsets, tshape = span
+    return offsets, tshape, _evaluate_span(_WORKER_SPEC, offsets, tshape)
+
+
+def sweep_tiles(models, hardware, n_f=None, scenarios="default",
+                bw_scale: Union[float, Sequence[float]] = 1.0,
+                b_cap: Union[None, float, Sequence[float]] = None,
+                tile_points: int = DEFAULT_TILE_POINTS,
+                processes: Optional[int] = None) -> Iterator[SweepTile]:
+    """Stream the §3 sweep as memory-bounded tiles (see module doc).
+
+    Yields :class:`SweepTile` blocks covering the full grid exactly once,
+    in deterministic row-major span order; at most ``tile_points`` cells of
+    field arrays are resident per tile. ``processes > 1`` shards the spans
+    across a process pool (fork), preserving yield order — the outermost
+    span axes are model × hardware, so large multi-model searches spread
+    across cores.
+    """
+    spec = resolve_grid(models, hardware, n_f, scenarios, bw_scale, b_cap)
+    yield from tiles_from_grid(spec, tile_points=tile_points,
+                               processes=processes)
+
+
+def tiles_from_grid(spec: GridSpec,
+                    tile_points: int = DEFAULT_TILE_POINTS,
+                    processes: Optional[int] = None) -> Iterator[SweepTile]:
+    """Tile stream over an already-resolved :class:`GridSpec`."""
+    spans = tile_spans(spec.shape, tile_points)
+    if processes is None or processes <= 1 or len(spans) <= 1:
+        for offsets, tshape in spans:
+            yield SweepTile(offsets=offsets, shape=tshape,
+                            fields=_evaluate_span(spec, offsets, tshape))
+        return
+    import multiprocessing as mp
+    try:
+        ctx = mp.get_context("fork")
+    except ValueError:                      # platform without fork
+        ctx = mp.get_context()
+    with ctx.Pool(processes, initializer=_init_worker,
+                  initargs=(spec,)) as pool:
+        for offsets, tshape, fields in pool.imap(_worker_eval, spans):
+            yield SweepTile(offsets=tuple(offsets), shape=tuple(tshape),
+                            fields=fields)
+
+
+def sweep(models, hardware, n_f=None, scenarios="default",
+          bw_scale: Union[float, Sequence[float]] = 1.0,
+          b_cap: Union[None, float, Sequence[float]] = None,
+          tile_points: int = DEFAULT_TILE_POINTS,
+          processes: Optional[int] = None) -> SweepResult:
+    """Vectorized §3 sweep over the full parameter grid. See module doc.
+
+    A thin concatenating wrapper over :func:`sweep_tiles`: the dense
+    result arrays are allocated once and filled tile by tile, so the
+    evaluation working set stays bounded regardless of grid size.
+    """
+    spec = resolve_grid(models, hardware, n_f, scenarios, bw_scale, b_cap)
+    fields: Dict[str, np.ndarray] = {}
+    for tile in tiles_from_grid(spec, tile_points=tile_points,
+                                processes=processes):
+        if not fields:
+            fields = {name: np.empty(spec.shape, dtype=arr.dtype)
+                      for name, arr in tile.fields.items()}
+        for name, arr in tile.fields.items():
+            fields[name][tile.slices] = arr
+    return SweepResult(models=spec.models, hardware=spec.hardware,
+                       scenarios=spec.scenarios,
+                       scenario_names=spec.scenario_names,
+                       bw_scale=spec.bw_scale, b_cap=spec.b_cap,
+                       n_f=spec.n_f, fields=fields)
 
 
 def run_named_sweep(name: str, **overrides) -> SweepResult:

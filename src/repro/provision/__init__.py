@@ -1,0 +1,40 @@
+"""``repro.provision`` — million-point AFD-vs-EP provisioning search.
+
+The paper's central claim is that AFD pays off only for specific
+(model × hardware × traffic) combinations: the §3.2 dead zone, the §3.3
+discrete-N_F quantization penalty, and the Appendix-A Superpod escape
+hatch carve the configuration space into AFD-wins and EP-wins regions.
+This subsystem searches that space directly:
+
+  * :mod:`repro.provision.search` — streams ≥10^6-point grids through the
+    memory-bounded ``repro.api.sweep_tiles`` core, prices every point with
+    Eqs. 6–9 + the §3.3 imbalance penalty + a $/token estimate, and keeps
+    a running Pareto frontier over (HFU, latency slack, $/token) without
+    ever materializing the grid.
+  * :mod:`repro.provision.pareto` — the exact streaming frontier.
+  * :mod:`repro.provision.pricing` — the $/token cost model, the
+    vectorized §3.3 α penalties, and the large-EP reference baseline.
+  * :mod:`repro.provision.recommend` — the deploy verdict: "deploy AFD
+    with N_F=k on <hw>" or "stay with EP", with the dead-zone / bandwidth
+    reason attached.
+  * :mod:`repro.provision.calibrate` — re-prices the analytic t_B against
+    measured ``AFDServeEngine`` window stats so the recommendation
+    carries an analytic-vs-measured error bar.
+
+CLI: ``python -m repro provision`` (jax-free unless ``--calibrate``).
+"""
+
+from repro.provision.calibrate import CalibrationReport, calibrate
+from repro.provision.pareto import ParetoFrontier
+from repro.provision.pricing import (EPBaseline, alpha_afd_array,
+                                     ep_baseline, ffn_flops_per_token)
+from repro.provision.recommend import ProvisionVerdict, recommend
+from repro.provision.search import (ProvisionGrid, ProvisionResult,
+                                    default_grid, search)
+
+__all__ = [
+    "CalibrationReport", "calibrate", "ParetoFrontier", "EPBaseline",
+    "alpha_afd_array", "ep_baseline", "ffn_flops_per_token",
+    "ProvisionVerdict", "recommend", "ProvisionGrid", "ProvisionResult",
+    "default_grid", "search",
+]

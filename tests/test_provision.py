@@ -1,0 +1,189 @@
+"""repro.provision: vectorized Eq. 16 parity, exact Pareto semantics,
+pricing/EP baselines, the streamed million-point search (scaled down), and
+deploy verdicts — the paper's two headline classifications included."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import imbalance as imb
+from repro.provision import (EPBaseline, ParetoFrontier, ProvisionGrid,
+                             alpha_afd_array, default_grid, ep_baseline,
+                             ffn_flops_per_token, recommend, search)
+from repro.provision.pricing import cost_per_mtoken
+from repro.api import registry
+
+SMOKE_KW = dict(models=["DeepSeek-V3"], hardware=["H800", "GB200"],
+                scenarios=["default"], n_f_max=40, bw_scale=[1.0],
+                b_cap=[float("inf")])
+
+
+# ---------------------------------------------------------------------------
+# pricing
+# ---------------------------------------------------------------------------
+
+def test_alpha_afd_array_matches_scalar_bitexact():
+    rng = np.random.default_rng(0)
+    n_a = rng.integers(1, 600, size=200)
+    n_f = rng.integers(1, 100, size=200)
+    for sigma in (0.5, 0.8, 0.95, 0.999, 1.0):
+        vec = alpha_afd_array(sigma, n_a.astype(float), n_f.astype(float))
+        ref = np.array([imb.alpha_afd(sigma, int(a), int(f))
+                        for a, f in zip(n_a, n_f)])
+        assert np.array_equal(vec, ref), f"divergence at sigma={sigma}"
+
+
+def test_ffn_flops_per_token_routed_only():
+    m = registry.resolve_model("DeepSeek-V3")
+    expect = (6 * m.hidden_size * m.moe_intermediate * m.top_k *
+              m.n_moe_layers)
+    assert ffn_flops_per_token(m) == expect
+
+
+def test_cost_per_mtoken_guards_zero_rate():
+    assert cost_per_mtoken(10, 8, 3.0, 0.0, 1e15, 4, 1e9) == np.inf
+    c = cost_per_mtoken(10, 8, 3.0, 0.5, 1e15, 4, 1e9)
+    assert np.isfinite(c) and c > 0
+
+
+def test_ep_baseline_carries_eq12_penalty():
+    ep = ep_baseline("DeepSeek-V3", "H800", sigma=0.8)
+    assert isinstance(ep, EPBaseline)
+    alpha = imb.alpha_ep(0.8, 3.0)
+    assert ep.alpha == pytest.approx(alpha)
+    assert ep.hfu_eff == pytest.approx(0.60 * alpha)
+    assert np.isfinite(ep.cost_per_mtok) and ep.cost_per_mtok > 0
+    # The override must flow straight through to $/token.
+    ep2 = ep_baseline("DeepSeek-V3", "H800", sigma=0.8,
+                      cost_per_device_hour=6.0)
+    assert ep2.cost_per_mtok == pytest.approx(2 * ep.cost_per_mtok)
+
+
+# ---------------------------------------------------------------------------
+# Pareto frontier
+# ---------------------------------------------------------------------------
+
+def test_offer_batch_matches_per_point_offer():
+    rng = np.random.default_rng(1)
+    pts = rng.random((5000, 3))
+    pts[rng.integers(0, 5000, 500)] = pts[rng.integers(0, 5000, 500)]  # ties
+    a = ParetoFrontier(3)
+    a.offer_batch(pts, lambda i: int(i))
+    b = ParetoFrontier(3)
+    order = np.lexsort((pts[:, 2], pts[:, 1], pts[:, 0]))[::-1]
+    for i in order:
+        b.offer(pts[i], int(i))
+    assert {m for m, _ in a.sorted_entries()} == \
+           {m for m, _ in b.sorted_entries()}
+    assert len(a) == len(b)
+    assert a.offered == b.offered == 5000
+
+
+def test_frontier_weak_dominance_and_eviction():
+    f = ParetoFrontier(2)
+    assert f.offer([1.0, 1.0], "a")
+    assert not f.offer([1.0, 1.0], "dup")          # exact tie: first wins
+    assert not f.offer([0.5, 1.0], "dominated")
+    assert f.offer([2.0, 2.0], "b")                # strictly dominates "a"
+    assert f.evicted == 1 and len(f) == 1
+    assert f.sorted_entries() == [((2.0, 2.0), "b")]
+
+
+def test_dominated_mask_agrees_with_bruteforce():
+    rng = np.random.default_rng(2)
+    f = ParetoFrontier(3)
+    f.offer_batch(rng.random((300, 3)), lambda i: i)
+    cand = rng.random((400, 3))
+    mask = f.dominated_mask(cand, block=64, f_chunk=16)
+    brute = np.array([(f.values >= c).all(axis=1).any() for c in cand])
+    assert np.array_equal(mask, brute)
+
+
+# ---------------------------------------------------------------------------
+# search + recommend
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def smoke_result():
+    return search(default_grid(**SMOKE_KW))
+
+
+def test_default_grid_validates_and_counts():
+    grid = default_grid(**SMOKE_KW)
+    assert isinstance(grid, ProvisionGrid)
+    assert grid.points == 1 * 2 * 1 * 1 * 1 * 40 * 2
+    with pytest.raises(KeyError):
+        default_grid(models=["no-such-model"])
+    with pytest.raises(ValueError):
+        default_grid(n_f_max=0)
+
+
+def test_search_is_deterministic(smoke_result):
+    again = search(default_grid(**SMOKE_KW))
+    a = json.dumps(smoke_result.to_obj(), sort_keys=True)
+    b = json.dumps(again.to_obj(), sort_keys=True)
+    assert a == b
+
+
+def test_search_accounting(smoke_result):
+    res = smoke_result
+    assert res.points == 160
+    assert 0 < res.eligible <= res.points
+    ineligible = sum(res.counters.values())
+    assert res.eligible + ineligible == res.points
+    assert len(res.frontier) >= 1
+    assert res.frontier_offered == res.eligible
+    # Every frontier row beats or ties every other on some objective.
+    objs = np.array([r["objectives"] for r in res.frontier])
+    for i, o in enumerate(objs):
+        others = np.delete(objs, i, axis=0)
+        if len(others):
+            assert not ((others >= o).all(axis=1) &
+                        (others > o).any(axis=1)).any()
+
+
+def test_search_tile_invariance(smoke_result):
+    # The frontier *metric set*, champions, EP baselines, and counters are
+    # tile-size-invariant. Payloads at exact three-objective ties are
+    # first-arrival-wins by design (see pareto.py), so only non-tied rows
+    # must match point-for-point.
+    tiny = search(default_grid(**SMOKE_KW), tile_points=16)
+    assert tiny.tiles > smoke_result.tiles
+    a, b = smoke_result.to_obj(), tiny.to_obj()
+    for key in ("points", "eligible", "counters", "champions",
+                "ep_baselines", "sigma", "ep_lambda", "shape"):
+        assert a[key] == b[key], key
+    obj_a = [tuple(r["objectives"]) for r in a["frontier"]]
+    obj_b = [tuple(r["objectives"]) for r in b["frontier"]]
+    assert obj_a == obj_b
+    # Any payload mismatch must sit at an exact metric tie: the objective
+    # vector of every differing row appears in both frontiers.
+    rows_a = {json.dumps(r, sort_keys=True) for r in a["frontier"]}
+    rows_b = {json.dumps(r, sort_keys=True) for r in b["frontier"]}
+    for row in rows_a ^ rows_b:
+        o = tuple(json.loads(row)["objectives"])
+        assert o in obj_a and o in obj_b, f"non-tie divergence: {row}"
+
+
+def test_headline_verdicts(smoke_result):
+    h800 = recommend(smoke_result, "DeepSeek-V3", "H800")
+    gb200 = recommend(smoke_result, "DeepSeek-V3", "GB200")
+    assert h800.decision == "stay-ep" and h800.hfu_margin < 0
+    assert "dead zone" in h800.reason
+    assert gb200.decision == "deploy-afd" and gb200.hfu_margin > 0
+    assert "superpod" in gb200.reason.lower()
+    obj = gb200.to_obj()
+    assert obj["afd"]["n_f"] >= 1 and obj["ep"]["hfu_eff"] > 0
+    json.dumps(obj)  # must be JSON-clean
+
+
+def test_recommend_validates_inputs(smoke_result):
+    with pytest.raises(KeyError):
+        recommend(smoke_result, "DeepSeek-V3", "H100")   # not in the grid
+    with pytest.raises(ValueError):
+        recommend(smoke_result, "DeepSeek-V3", "H800", calibration_scale=0.0)
+    derated = recommend(smoke_result, "DeepSeek-V3", "GB200",
+                        calibration_scale=0.5)
+    full = recommend(smoke_result, "DeepSeek-V3", "GB200")
+    assert derated.hfu_margin < full.hfu_margin

@@ -1,0 +1,56 @@
+"""Registry lookup errors: every namespace must fail with the full list of
+known names plus a closest-match suggestion (satellite of the provisioning
+PR — a million-point CLI run should never die on a bare KeyError)."""
+
+import pytest
+
+from repro.api import registry
+
+
+def _message(excinfo) -> str:
+    return str(excinfo.value)
+
+
+def test_model_typo_suggests_closest():
+    with pytest.raises(KeyError) as ei:
+        registry.resolve_model("DeepSeekV3")
+    msg = _message(ei)
+    assert "did you mean" in msg and "DeepSeek-V3" in msg
+
+
+def test_hardware_typo_suggests_closest():
+    with pytest.raises(KeyError) as ei:
+        registry.resolve_hardware("GB2OO")
+    msg = _message(ei)
+    assert "did you mean" in msg and "GB200" in msg
+
+
+def test_scenario_typo_suggests_closest():
+    with pytest.raises(KeyError) as ei:
+        registry.resolve_scenario("tight_slo")
+    msg = _message(ei)
+    assert "did you mean" in msg and "tight-slo" in msg
+
+
+def test_router_typo_suggests_closest():
+    with pytest.raises(KeyError) as ei:
+        registry.resolve_router("least_kv")
+    msg = _message(ei)
+    assert "did you mean" in msg and "least-kv" in msg
+
+
+def test_unrelated_name_lists_known_without_guess():
+    with pytest.raises(KeyError) as ei:
+        registry.resolve_hardware("zzzzzz")
+    msg = _message(ei)
+    assert "did you mean" not in msg
+    assert "H800" in msg  # the known list is printed
+
+
+def test_named_sweep_typo_suggests_closest():
+    known = registry.list_sweeps()
+    assert known, "no named sweeps registered"
+    typo = known[0][:-1] + "x"
+    with pytest.raises(KeyError) as ei:
+        registry.named_sweep(typo)
+    assert "did you mean" in _message(ei)

@@ -1,0 +1,137 @@
+"""Streaming tile core: FIELDS schema invariants, SweepResult/Record JSON
+round-trips, tile partition exactness, and the memory-regression guard
+that pins the per-tile footprint on a million-point grid."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import (GridSpec, registry, resolve_grid, sweep, sweep_tiles,
+                       tile_footprint_bytes, tile_spans, tiles_from_grid)
+from repro.api.records import Record, dump_records, load_records
+from repro.api.sweep import (BYTES_PER_CELL, DEFAULT_TILE_POINTS,
+                             FIELD_ITEMSIZES, FIELDS)
+
+
+# ---------------------------------------------------------------------------
+# FIELDS schema invariants
+# ---------------------------------------------------------------------------
+
+def test_fields_ordering_and_itemsizes_agree():
+    # FIELD_ITEMSIZES must cover exactly the FIELDS tuple, in order — the
+    # tile-footprint accounting and the record schema both key off it.
+    assert tuple(FIELD_ITEMSIZES) == FIELDS
+    assert BYTES_PER_CELL == sum(FIELD_ITEMSIZES.values())
+    assert FIELDS[0] == "feasible" and FIELDS[-1] == "t_budget"
+
+
+def test_tile_fields_match_schema():
+    spec = resolve_grid("DeepSeek-V3", "H800", n_f=[1, 2, 3])
+    (tile,) = list(tiles_from_grid(spec))
+    assert tuple(tile.fields) == FIELDS
+    for name, arr in tile.fields.items():
+        assert arr.shape == tile.shape
+        if arr.dtype.kind in "bf":
+            assert arr.dtype.itemsize == FIELD_ITEMSIZES[name]
+        else:  # unicode: numpy itemsize is 4 bytes per code point
+            assert arr.dtype.itemsize == FIELD_ITEMSIZES[name]
+
+
+# ---------------------------------------------------------------------------
+# Record / SweepResult JSON round-trip
+# ---------------------------------------------------------------------------
+
+def test_sweep_records_roundtrip_json(tmp_path):
+    res = sweep("DeepSeek-V3", ["H800", "GB200"], n_f=[1, 4, 8])
+    recs = res.records()
+    assert len(recs) == res.size
+    # Record fields appear after the axis labels, in FIELDS order.
+    for rec in recs:
+        keys = list(rec)
+        assert keys[-len(FIELDS):] == list(FIELDS)
+    path = tmp_path / "sweep.json"
+    dump_records(recs, str(path))
+    back = load_records(str(path))
+    assert len(back) == len(recs)
+    for orig, rt in zip(recs, back):
+        assert isinstance(rt, Record)
+        assert json.dumps(dict(orig), sort_keys=True) == \
+               json.dumps(dict(rt), sort_keys=True)
+    # Attribute access survives the round trip.
+    assert back[0].model == "DeepSeek-V3" and back[0].n_f == 1
+
+
+def test_record_coerces_numpy_and_nan():
+    r = Record.from_obj({"a": np.float64(1.5), "b": np.int64(2),
+                         "c": np.bool_(True), "d": float("nan"),
+                         "e": np.array([1.0, 2.0])})
+    assert json.loads(r.to_json()) == {"a": 1.5, "b": 2, "c": True,
+                                       "d": None, "e": [1.0, 2.0]}
+
+
+# ---------------------------------------------------------------------------
+# tile partition + memory guard
+# ---------------------------------------------------------------------------
+
+def _million_point_spec() -> GridSpec:
+    # 2 × 5 × 4 × 4 × 5 × 1300 = 1,040,000 points — shape accounting only,
+    # nothing is evaluated.
+    models = [registry.resolve_model(m)
+              for m in ("DeepSeek-V3", "Qwen3-Coder")]
+    hardware = [registry.resolve_hardware(h)
+                for h in ("H800", "H200", "GB200", "B200", "TPUv5p")]
+    return resolve_grid(models, hardware,
+                        n_f=np.arange(1, 1301),
+                        scenarios=sorted(registry.SCENARIOS),
+                        bw_scale=[0.5, 0.75, 1.0, 1.25],
+                        b_cap=[np.inf, 4096, 2048, 1024, 512])
+
+
+def test_tile_spans_partition_exactly():
+    spec = _million_point_spec()
+    assert spec.size == 1_040_000
+    spans = tile_spans(spec.shape, tile_points=DEFAULT_TILE_POINTS)
+    total = 0
+    seen = np.zeros(spec.shape[:2], dtype=int)  # coarse overlap probe
+    for offsets, tshape in spans:
+        cells = int(np.prod(tshape))
+        assert cells <= DEFAULT_TILE_POINTS
+        for o, s, dim in zip(offsets, tshape, spec.shape):
+            assert 0 <= o and o + s <= dim
+        total += cells
+    assert total == spec.size  # exact cover, no overlap, no gap
+    del seen
+
+
+def test_tile_footprint_is_memory_bounded():
+    # The guard: streaming a 10^6-point grid must never materialize more
+    # than one tile of field arrays — ≤ 64 MiB resident per tile at the
+    # default budget (the dense grid would be ~125 MiB of fields alone).
+    spec = _million_point_spec()
+    spans = tile_spans(spec.shape, tile_points=DEFAULT_TILE_POINTS)
+    worst = max(tile_footprint_bytes(ts) for _, ts in spans)
+    assert worst <= DEFAULT_TILE_POINTS * BYTES_PER_CELL
+    assert worst <= 64 * 1024 * 1024
+    assert tile_footprint_bytes(spec.shape) > worst * 10
+
+
+def test_tiled_stream_concat_equals_dense_sweep():
+    kw = dict(models=["DeepSeek-V3", "Qwen3-Coder"],
+              hardware=["H800", "GB200"], n_f=list(range(1, 25)),
+              bw_scale=[0.75, 1.0], b_cap=[np.inf, 1024])
+    dense = sweep(**kw)
+    acc = {f: np.empty(dense.shape, dtype=dense.fields[f].dtype)
+           for f in FIELDS}
+    n_tiles = 0
+    for tile in sweep_tiles(tile_points=64, **kw):
+        for f in FIELDS:
+            acc[f][tile.slices] = tile.fields[f]
+        n_tiles += 1
+    assert n_tiles > 1
+    for f in FIELDS:
+        a, b = acc[f], dense.fields[f]
+        if a.dtype.kind == "f":
+            assert np.all((a == b) | (np.isnan(a) & np.isnan(b))), f
+        else:
+            assert np.array_equal(a, b), f

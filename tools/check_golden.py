@@ -48,6 +48,49 @@ def normalize(doc: dict) -> list:
     return lines
 
 
+def row_map(doc: dict) -> dict:
+    """``module::name`` → normalized derived dict (volatile keys masked).
+
+    Duplicate row names within a module get a ``#<i>`` suffix so every row
+    stays addressable in the key-level diff.
+    """
+    out = {}
+    for row in doc.get("rows", []):
+        derived = {k: "~" if _volatile(k) else v
+                   for k, v in row.get("derived", {}).items()}
+        base = f"{row['module']}::{row['name']}"
+        key = base
+        i = 1
+        while key in out:
+            key = f"{base}#{i}"
+            i += 1
+        out[key] = derived
+    return out
+
+
+def keylevel_diff(golden: dict, current: dict) -> list:
+    """Human-readable per-row, per-key report of what actually changed.
+
+    Complements the unified diff (which shows whole rows): for rows present
+    on both sides, names each derived key whose value moved; rows present
+    on only one side are listed as added/removed.
+    """
+    gmap, cmap = row_map(golden), row_map(current)
+    lines = []
+    for key in sorted(set(gmap) | set(cmap)):
+        if key not in cmap:
+            lines.append(f"  - row removed: {key}")
+        elif key not in gmap:
+            lines.append(f"  + row added:   {key}")
+        else:
+            g, c = gmap[key], cmap[key]
+            for k in sorted(set(g) | set(c)):
+                gv, cv = g.get(k, "<absent>"), c.get(k, "<absent>")
+                if gv != cv:
+                    lines.append(f"  ~ {key} :: {k}: {gv} -> {cv}")
+    return lines
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("current", help="JSON from python -m benchmarks.run --json")
@@ -87,6 +130,11 @@ def main(argv=None) -> int:
                                 lineterm="")
     for line in diff:
         print(line)
+    detail = keylevel_diff(golden, current)
+    if detail:
+        print(f"\nkey-level diff ({len(detail)} change(s)):")
+        for line in detail:
+            print(line)
     print("\ngolden-diff FAILED — investigate, then re-bless with "
           "tools/check_golden.py --update if intended", file=sys.stderr)
     return 1

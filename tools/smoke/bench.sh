@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Bench smoke: CLI front door + every benchmark module + golden diff.
+# All deterministic derived values must match benchmarks/golden.json
+# (timing fields normalized out by tools/check_golden.py).
+set -euo pipefail
+export PYTHONPATH=src
+
+python -m repro list
+python -m repro plan --model DeepSeek-V3 --hardware H800 --json
+python -m repro bench --n-f-max 24
+
+python -m benchmarks.run --json bench.json
+python tools/check_golden.py bench.json

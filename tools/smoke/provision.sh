@@ -1,0 +1,34 @@
+#!/usr/bin/env bash
+# Provision smoke: the full-default million-point AFD-vs-EP search, twice.
+# The search must stream >= 10^6 grid points, produce byte-identical JSON
+# across the two runs (wall-clock popped), and reproduce the paper's two
+# headline classifications: DeepSeek-V3 on H800 stays in the §3.2 dead
+# zone (stay-ep) while the Appendix-A GB200 superpod escapes it
+# (deploy-afd). Analytic numpy only — no jax import on this path.
+set -euo pipefail
+export PYTHONPATH=src
+
+for run in a b; do
+  python -m repro provision --json "prov_$run.json"
+done
+
+python - <<'EOF'
+import json
+a = json.load(open("prov_a.json"))
+b = json.load(open("prov_b.json"))
+for doc in (a, b):
+    doc.pop("wall_s")
+assert a == b, "provision search is not deterministic"
+res = a["result"]
+assert res["points"] >= 1_000_000, f"grid too small: {res['points']}"
+assert res["eligible"] > 0 and len(res["frontier"]) > 0
+verdicts = {f"{v['model']}|{v['hardware']}": v for v in a["verdicts"]}
+h800 = verdicts["DeepSeek-V3|H800"]
+gb200 = verdicts["DeepSeek-V3|GB200"]
+assert h800["decision"] == "stay-ep", h800
+assert gb200["decision"] == "deploy-afd", gb200
+print(f"provision smoke OK: {res['points']} points in {res['tiles']} tiles, "
+      f"frontier {len(res['frontier'])}, deterministic, "
+      f"H800 stay-ep ({h800['hfu_margin']:+.4f}) / "
+      f"GB200 deploy-afd ({gb200['hfu_margin']:+.4f})")
+EOF

@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Serve-traffic smoke: the two-role AFD serving engine end-to-end on a
+# tiny MoE under a seeded Poisson trace. Must run to completion with the
+# measured M2N bytes matching the Eq. 9/17 prediction exactly and a
+# measured-vs-predicted HFU record emitted for every busy window.
+set -euo pipefail
+export PYTHONPATH=src
+
+python -m repro serve-traffic \
+  --profile poisson-burst --max-requests 10 --seed 0 \
+  --json serve.json
+
+python - <<'EOF'
+import json
+doc = json.load(open("serve.json"))
+s = doc["summary"]
+assert s["bytes_match_all"] is True, "M2N bytes diverged"
+assert s["arrivals"] > 0 and s["completed"] == s["arrivals"]
+busy = [w for w in doc["windows"] if w["tokens_routed"]]
+assert busy, "no busy windows recorded"
+assert all(w["hfu_measured"] is not None
+           and w["hfu_measured"] <= w["hfu_predicted"]
+           for w in busy), "HFU record missing or unbounded"
+print(f"serve smoke OK: {s['completed']} requests, "
+      f"{len(doc['windows'])} windows, HFU records present")
+EOF
