@@ -67,7 +67,6 @@ def main() -> None:
     afd_us = (time.perf_counter() - t0) * 1e6 / steps
 
     err = float(jnp.max(jnp.abs(logits - ep_logits)))
-    moe_layers = sum(cfg.is_moe_layer(i) for i in range(cfg.n_layers))
     # Eq. 17-style prediction, dtype-accurate: dispatch+combine = 2·B·H·itemsize
     per_cycle = rt.stats.dispatch_bytes / max(rt.stats.dispatches, 1)
     pred = B * cfg.d_model * 4 + B * cfg.top_k * 8   # f32 tokens + gating meta

@@ -11,7 +11,7 @@ from __future__ import annotations
 import time
 
 from repro.core import comm_roofline as cr
-from repro.core.budget import Scenario, stage_budget
+from repro.core.budget import Scenario
 from repro.core.hardware import get_hardware
 from repro.core.modelspec import get_model
 

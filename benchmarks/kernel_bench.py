@@ -1,0 +1,230 @@
+"""Grouped-GEMM kernel trajectory bench — the perf-ratchet CI input.
+
+Runs every expert-path kernel variant (f32 / int8 / int4 weights ×
+unfused / fused router permute) over three shape points and emits
+``BENCH_kernels.json``: wall-clock per call, the variant's *achieved
+arithmetic intensity* (FLOPs over the bytes the variant actually moves —
+deterministic, unlike wall-clock), and correctness-vs-oracle error with
+its documented tolerance. ``tools/check_bench.py`` diffs a fresh run
+against the committed trajectory: deterministic keys byte-equal, ``*_us``
+keys within ratchet tolerance, ``*_err`` keys bounded by the recorded
+``tol``.
+
+The final rows tie the kernel work back to the paper: the Eq. 6 dead-zone
+boundary for DeepSeek-V3 on TPUv5e at f16 vs int4 expert weights, computed
+twice — through the scalar core (``hfu_bound.dead_zone_boundary``) and
+through the vectorized ``repro.api.sweep`` grid — and asserted equal.
+int4 halving the weight bytes moves the boundary (9 → 8), demonstrating
+that kernel-level quantization is a *planning* lever, not just a speedup.
+
+Every row self-checks; any violated bound raises, so the smoke CI leg
+needs no pytest. Run:
+
+    PYTHONPATH=src python -m benchmarks.kernel_bench --json BENCH_kernels.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Optional
+
+import numpy as np
+
+# Three shape points: decode-small, decode-mid, wide fan-out. n must be a
+# multiple of 128 (the int4 quantization block / tile_n).
+SHAPES = (
+    ("s0_decode", dict(m=64, k=128, n=256, g=8)),
+    ("s1_mid", dict(m=128, k=256, n=256, g=8)),
+    ("s2_fanout", dict(m=256, k=128, n=512, g=16)),
+)
+TILES = dict(tile_m=32, tile_n=128, tile_k=64)
+
+# Documented tolerances vs the dequantized-weight oracle (interpret-mode
+# f32 accumulation differs from the oracle only by summation order).
+TOL_F32_PER_K = 2e-5          # · K
+TOL_QUANT = 1e-4              # int8/int4 vs their own dequantized ref
+
+# Dead-zone acceptance pair: int4 (0.5 B/param) moves the boundary vs f16
+# (2 B/param) for this model on this platform.
+DEAD_ZONE_MODEL = "DeepSeek-V3"
+DEAD_ZONE_HW = "TPUv5e"
+
+
+def _group_sizes(m: int, g: int, rng) -> np.ndarray:
+    cuts = np.sort(rng.integers(0, m + 1, size=g - 1))
+    return np.diff(np.concatenate([[0], cuts, [m]])).astype(np.int32)
+
+
+def _weight_bytes(dtype: str, g: int, k: int, n: int) -> float:
+    if dtype == "f32":
+        return 4.0 * g * k * n
+    if dtype == "int8":
+        return 1.0 * g * k * n + 4.0 * g                 # codes + scales
+    if dtype == "int4":
+        return 0.5 * g * k * n + 4.0 * g * (n // 128)    # packed + scales
+    raise ValueError(dtype)
+
+
+def _bench(fn, iters: int) -> float:
+    import jax
+    jax.block_until_ready(fn())                          # warm / compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(iters: int = 2) -> dict:
+    import jax.numpy as jnp
+    from repro.kernels import grouped_gemm as gg
+    from repro.kernels import ref as kref
+
+    rows = []
+    rng = np.random.default_rng(0)
+    for sname, shp in SHAPES:
+        m, k, n, g = shp["m"], shp["k"], shp["n"], shp["g"]
+        lhs = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(g, k, n)).astype(np.float32))
+        gs = jnp.asarray(_group_sizes(m, g, rng))
+        perm = jnp.asarray(rng.permutation(m).astype(np.int32))
+        codes8, scale8 = gg.quantize_experts(w)
+        packed4, scale4 = gg.quantize_experts_int4(w, block_n=128)
+
+        variants = {
+            "f32": (w, None),
+            "int8": (codes8, scale8),
+            "int4": (packed4, scale4),
+        }
+        flops = 2.0 * m * k * n
+        for dtype, (rhs, scales) in variants.items():
+            if dtype == "f32":
+                oracle_w = w
+            elif dtype == "int8":
+                oracle_w = gg.dequantize_experts(rhs, scales)
+            else:
+                oracle_w = gg.dequantize_experts_int4(rhs, scales)
+            tol = TOL_F32_PER_K * k if dtype == "f32" else TOL_QUANT
+            for fused in (False, True):
+                kwargs = dict(TILES, scales=scales)
+                if fused:
+                    kwargs.update(row_index=perm, out_index=perm, out_rows=m)
+                us = _bench(lambda: gg.grouped_gemm_pallas(
+                    lhs, rhs, gs, **kwargs), iters)
+                out = gg.grouped_gemm_pallas(lhs, rhs, gs, **kwargs)
+                oracle = kref.grouped_gemm_fused_ref(
+                    lhs, oracle_w, gs,
+                    row_index=perm if fused else None,
+                    out_index=perm if fused else None,
+                    out_rows=m if fused else None)
+                err = float(jnp.max(jnp.abs(out.astype(jnp.float32) -
+                                            oracle.astype(jnp.float32))))
+                assert err <= tol, (
+                    f"{sname} {dtype} fused={fused}: err {err:.3e} "
+                    f"exceeds documented tol {tol:.3e}")
+                # Bytes the variant actually moves: activations in, weights
+                # at their storage width, outputs back.
+                bytes_moved = (4.0 * m * k + _weight_bytes(dtype, g, k, n)
+                               + 4.0 * m * n)
+                derived = {
+                    "wall_us": round(us, 1),
+                    "intensity": round(flops / bytes_moved, 6),
+                    "max_err": float(f"{err:.3e}"),
+                    "tol": tol,
+                    "ok": True,
+                }
+                if fused and dtype == "f32":
+                    # Acceptance: fused permute must be BIT-exact vs the
+                    # unfused gather → pallas GEMM → scatter composition.
+                    xs = jnp.take(lhs, perm, axis=0)
+                    ys = gg.grouped_gemm_pallas(xs, rhs, gs, **TILES)
+                    unfused_f32 = jnp.zeros_like(ys).at[perm].set(ys)
+                    bit = bool(jnp.all(out == unfused_f32))
+                    assert bit, f"{sname}: fused f32 not bit-exact"
+                    derived["bit_exact_vs_unfused"] = bit
+                tag = "fused" if fused else "unfused"
+                rows.append({"name": f"{sname}_{dtype}_{tag}",
+                             "derived": derived})
+
+    rows.extend(_dead_zone_rows())
+    return {"version": 1, "rows": rows, "failures": 0}
+
+
+def _boundary_from_sweep(res) -> Optional[int]:
+    """The dead-zone boundary recomputed from vectorized sweep fields
+    (the same rule as ``hfu_bound.dead_zone``, applied to the grid)."""
+    from repro.core import comm_roofline as cr
+    hfu = res.fields["hfu"][0, 0, 0, 0, 0]
+    st = res.fields["temporal_sparsity"][0, 0, 0, 0, 0]
+    reg = res.fields["regime"][0, 0, 0, 0, 0]
+    zone = [int(res.n_f[i]) for i in range(1, len(res.n_f))
+            if hfu[i] <= hfu[i - 1] * 1.02
+            and st[i] <= st[i - 1] + 1e-12
+            and reg[i] in (cr.REGIME_SCALE_OUT_BOUND,
+                           cr.REGIME_MAX_INTENSITY)]
+    return min(zone) if zone else None
+
+
+def _dead_zone_rows() -> list:
+    from repro.api import registry
+    from repro.api.sweep import sweep
+    from repro.core import budget as bdg
+    from repro.core import hfu_bound as hb
+
+    model = registry.resolve_model(DEAD_ZONE_MODEL)
+    hw = registry.resolve_hardware(DEAD_ZONE_HW)
+    n_f = range(1, hb.default_n_f_max(model, hw) + 1)
+    rows = []
+    boundaries = {}
+    for dtype in ("f16", "int4"):
+        wb = bdg.weight_bytes_per_param(dtype)
+        scalar_b = hb.dead_zone_boundary(model, hw, weight_bytes=wb)
+        res = sweep(DEAD_ZONE_MODEL, DEAD_ZONE_HW, n_f=n_f, weight_bytes=wb)
+        sweep_b = _boundary_from_sweep(res)
+        assert scalar_b == sweep_b, (
+            f"scalar/sweep dead-zone disagreement at {dtype}: "
+            f"{scalar_b} vs {sweep_b}")
+        boundaries[dtype] = scalar_b
+        rows.append({"name": f"dead_zone_{dtype}",
+                     "derived": {"model": DEAD_ZONE_MODEL,
+                                 "hardware": DEAD_ZONE_HW,
+                                 "weight_bytes": wb,
+                                 "boundary_n_f": scalar_b,
+                                 "sweep_agrees": True}})
+    shifted = boundaries["int4"] != boundaries["f16"]
+    assert shifted, (
+        f"int4 did not move the dead-zone boundary on "
+        f"{DEAD_ZONE_MODEL}×{DEAD_ZONE_HW} "
+        f"(f16={boundaries['f16']}, int4={boundaries['int4']})")
+    rows.append({"name": "dead_zone_shift",
+                 "derived": {"boundary_f16": boundaries["f16"],
+                             "boundary_int4": boundaries["int4"],
+                             "shifted": True}})
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the BENCH_kernels.json trajectory document")
+    ap.add_argument("--iters", type=int, default=2)
+    args = ap.parse_args(argv)
+
+    doc = run(iters=args.iters)
+    print("name,us_per_call,derived")
+    for row in doc["rows"]:
+        d = row["derived"]
+        us = d.get("wall_us", 0)
+        body = ";".join(f"{k}={d[k]}" for k in sorted(d) if k != "wall_us")
+        print(f"{row['name']},{us},{body}")
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"# wrote {len(doc['rows'])} rows → {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

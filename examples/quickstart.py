@@ -9,11 +9,10 @@
 """
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.core import budget, hfu_bound, modelspec, planner
+from repro.core import modelspec, planner
 from repro.core.hardware import get_hardware
 from repro.models.model import make_model
 from repro.serving.engine import DecodeEngine, Request

@@ -10,13 +10,23 @@ Subcommands:
   serve-traffic — two-role AFD serving engine under a stochastic trace.
   serve-fleet   — multi-replica fleet: routed traffic, KV-aware balancing,
                   failure drain/requeue, elastic N_F rescale.
+  tune          — grouped-GEMM block-size autotuner: times candidate
+                  tilings per (E, tokens/expert, d_ff) shape and persists
+                  the winners to the on-disk table ops.grouped_gemm reads.
   list          — registry contents (models, hardware, scenarios, sweeps,
                   traffic profiles, fleet router policies).
+
+``sweep`` and ``provision`` take ``--weight-dtype`` (fp8/int8/int4/bf16/…)
+to price the expert weights at the quantized kernel widths — narrower
+weights raise the Eq. 6 arithmetic intensity and shift the dead-zone
+boundary, so the flag changes *which N_F the search picks*, not just a
+reported speed.
 
 Analysis subcommands import no jax, so the CLI starts in milliseconds and
 runs anywhere; ``serve-traffic``/``serve-fleet`` are the exception — they
 lower a smoke-scale architecture onto the two-role AFD runtime (jax
-imported lazily inside the command), as does ``provision --calibrate``.
+imported lazily inside the command), as do ``provision --calibrate`` and
+``tune`` (which runs the Pallas kernel).
 """
 
 from __future__ import annotations
@@ -128,6 +138,8 @@ def cmd_plan(args) -> int:
 
 def cmd_sweep(args) -> int:
     from repro.api import run_named_sweep, sweep
+    from repro.core.budget import weight_bytes_per_param
+    wb = weight_bytes_per_param(args.weight_dtype)
     t0 = time.perf_counter()
     if args.name:
         overrides = {}
@@ -135,6 +147,8 @@ def cmd_sweep(args) -> int:
             overrides["n_f"] = range(1, args.n_f_max + 1)
         if args.scenario != "default":
             overrides["scenarios"] = args.scenario
+        if wb != 1.0:
+            overrides["weight_bytes"] = wb
         res = run_named_sweep(args.name, **overrides)
     else:
         models = _split(args.models)
@@ -147,12 +161,15 @@ def cmd_sweep(args) -> int:
                     n_f=range(1, args.n_f_max + 1) if args.n_f_max else None,
                     scenarios=args.scenario,
                     bw_scale=_floats(args.bw_scale) or 1.0,
-                    b_cap=_floats(args.b_cap))
+                    b_cap=_floats(args.b_cap),
+                    weight_bytes=wb)
     dt = time.perf_counter() - t0
     if args.json:
         res.to_json(args.json)
     ceilings = res.ceilings(feasible_only=not args.infeasible)
     print(f"# {res.size} grid points in {dt*1e3:.1f} ms"
+          + (f", expert weights {args.weight_dtype} ({wb:g} B/param)"
+             if wb != 1.0 else "")
           + (f" → {args.json}" if args.json else ""))
     extra = [k for k in ("bw_scale", "b_cap")
              if ceilings and k in ceilings[0]]
@@ -242,11 +259,13 @@ def _parse_targets(specs: Optional[List[str]], grid, scenario: str):
 
 
 def cmd_provision(args) -> int:
+    from repro.core.budget import weight_bytes_per_param
     from repro.provision import default_grid, recommend, search
 
     kwargs = dict(cost_overrides=_parse_costs(args.cost),
                   sigma=args.sigma, ep_lambda=args.lambda_ep,
-                  n_f_max=args.n_f_max)
+                  n_f_max=args.n_f_max,
+                  weight_bytes=weight_bytes_per_param(args.weight_dtype))
     if args.models:
         kwargs["models"] = _split(args.models)
     if args.hardware:
@@ -285,7 +304,8 @@ def cmd_provision(args) -> int:
     doc = {"grid": {"points": grid.points, "shape": list(grid.spec.shape),
                     "n_a_slack": list(grid.n_a_slack),
                     "sigma": grid.sigma, "ep_lambda": grid.ep_lambda,
-                    "cost_overrides": dict(grid.cost_overrides)},
+                    "cost_overrides": dict(grid.cost_overrides),
+                    "weight_bytes": grid.spec.weight_bytes},
            "result": res.to_obj(),
            "verdicts": [v.to_obj() for v in verdicts],
            "calibration": calibration,
@@ -608,6 +628,44 @@ def cmd_serve_fleet(args) -> int:
     return 0
 
 
+def _parse_tune_shapes(specs: Optional[List[str]]) -> List[tuple]:
+    """Parse repeated ``--shape E:TPE:DMODEL:DFF`` quads."""
+    shapes = []
+    for spec in specs or []:
+        parts = spec.split(":")
+        if len(parts) != 4:
+            raise ValueError(f"bad --shape {spec!r}; want E:TPE:DMODEL:DFF, "
+                             "e.g. --shape 8:16:256:512")
+        shapes.append(tuple(int(v) for v in parts))
+    return shapes
+
+
+# Default tune points: a decode shape (few tokens/expert — the paper's
+# fan-out regime), a mid batch, and a prefill-ish slab. Sized for the
+# interpret-mode emulator; real-TPU retunes should use production shapes.
+DEFAULT_TUNE_SHAPES = [(8, 8, 256, 512), (8, 32, 256, 512),
+                       (16, 64, 256, 1024)]
+
+
+def cmd_tune(args) -> int:
+    from repro.kernels import autotune
+    shapes = _parse_tune_shapes(args.shape) or DEFAULT_TUNE_SHAPES
+    t0 = time.perf_counter()
+    results = autotune.tune(shapes, reps=args.reps, path=args.out)
+    wall = time.perf_counter() - t0
+    path = args.out or autotune._TABLE_PATH
+    if args.json:
+        print(json.dumps({"results": results, "table": path,
+                          "wall_s": wall}, indent=2, sort_keys=True))
+        return 0
+    print(f"# tuned {len(results)} shape points in {wall:.1f}s → {path}")
+    print("key,best_tiles,best_us,candidates")
+    for r in results:
+        print(f"{r['key']},{r['best']},{r['timings_us'][r['best']]:.1f},"
+              f"{len(r['timings_us'])}")
+    return 0
+
+
 def build_parser() -> argparse.ArgumentParser:
     p = argparse.ArgumentParser(
         prog="python -m repro",
@@ -639,6 +697,11 @@ def build_parser() -> argparse.ArgumentParser:
                     help="comma-separated per-rank token inflow caps")
     sw.add_argument("--infeasible", action="store_true",
                     help="include HBM-infeasible points in ceilings")
+    sw.add_argument("--weight-dtype", default="fp8",
+                    choices=["f32", "bf16", "f16", "fp8", "int8", "int4"],
+                    help="expert-weight storage width for the Eq. 6 Mem "
+                         "term (int4 halves bytes vs fp8 and shifts the "
+                         "dead-zone boundary)")
     sw.add_argument("--json", default=None, metavar="PATH",
                     help="write the full record grid as JSON")
     sw.set_defaults(fn=cmd_sweep)
@@ -686,6 +749,10 @@ def build_parser() -> argparse.ArgumentParser:
                          "(repeatable; default: every model x hardware)")
     pv.add_argument("--top", type=int, default=10,
                     help="frontier rows printed to stdout")
+    pv.add_argument("--weight-dtype", default="fp8",
+                    choices=["f32", "bf16", "f16", "fp8", "int8", "int4"],
+                    help="expert-weight storage width priced into the "
+                         "Eq. 6 Mem term and the HBM feasibility test")
     pv.add_argument("--calibrate", action="store_true",
                     help="derate verdicts by the measured/predicted HFU "
                          "scale from the serving engine (needs jax)")
@@ -761,6 +828,21 @@ def build_parser() -> argparse.ArgumentParser:
     sf.add_argument("--json", default=None, metavar="PATH",
                     help="write windows+summary JSON ('-' for stdout)")
     sf.set_defaults(fn=cmd_serve_fleet, rescale=True)
+
+    tn = sub.add_parser(
+        "tune",
+        help="autotune grouped-GEMM block sizes; persists the table "
+             "ops.grouped_gemm consults")
+    tn.add_argument("--shape", action="append", metavar="E:TPE:DMODEL:DFF",
+                    help="workload shape to tune (repeatable); default: "
+                         "three decode/prefill points")
+    tn.add_argument("--reps", type=int, default=2,
+                    help="timed repetitions per candidate tiling")
+    tn.add_argument("--out", default=None, metavar="PATH",
+                    help="table file (default: the module-adjacent table "
+                         "src/repro/kernels/autotune_table.json)")
+    tn.add_argument("--json", action="store_true")
+    tn.set_defaults(fn=cmd_tune)
 
     ls = sub.add_parser("list", help="registry contents")
     ls.add_argument("kind", nargs="?", default="all",

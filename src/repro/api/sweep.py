@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple, Union
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -101,6 +101,7 @@ class SweepResult:
     b_cap: np.ndarray             # (C,)  np.inf = uncapped
     n_f: np.ndarray               # (N,)
     fields: Dict[str, np.ndarray]
+    weight_bytes: float = 1.0     # expert-weight bytes/param (Eq. 6 Mem)
 
     @property
     def shape(self):
@@ -123,6 +124,8 @@ class SweepResult:
             lab["bw_scale"] = float(self.bw_scale[l])
         if len(self.b_cap) > 1 or np.isfinite(self.b_cap[c]):
             lab["b_cap"] = float(self.b_cap[c])
+        if self.weight_bytes != 1.0:
+            lab["weight_bytes"] = float(self.weight_bytes)
         return lab
 
     def record(self, idx) -> Record:
@@ -197,6 +200,7 @@ class GridSpec:
     bw_scale: np.ndarray          # (L,)
     b_cap: np.ndarray             # (C,)
     n_f: np.ndarray               # (N,)
+    weight_bytes: float = 1.0     # expert-weight bytes/param (Eq. 6 Mem)
 
     @property
     def shape(self) -> Tuple[int, ...]:
@@ -213,9 +217,19 @@ class GridSpec:
 
 def resolve_grid(models, hardware, n_f=None, scenarios="default",
                  bw_scale: Union[float, Sequence[float]] = 1.0,
-                 b_cap: Union[None, float, Sequence[float]] = None
+                 b_cap: Union[None, float, Sequence[float]] = None,
+                 weight_bytes: float = 1.0
                  ) -> GridSpec:
-    """Resolve names → specs and validate the axis arrays (no evaluation)."""
+    """Resolve names → specs and validate the axis arrays (no evaluation).
+
+    ``weight_bytes`` (bytes/param, scalar) scales the grouped GEMM's Mem
+    term and the HBM feasibility test across the whole grid — see
+    ``budget.WEIGHT_BYTES_PER_PARAM`` for the named widths. At the default
+    1.0 (the paper's fp8 assumption) every cell is bit-identical to the
+    pre-quantization sweep.
+    """
+    if not (weight_bytes > 0):
+        raise ValueError(f"weight_bytes must be positive, got {weight_bytes}")
     models = _as_models(models)
     hardware = _as_hardware(hardware)
     scens = _as_scenarios(scenarios)
@@ -232,7 +246,8 @@ def resolve_grid(models, hardware, n_f=None, scenarios="default",
            else np.atleast_1d(np.asarray(b_cap, dtype=np.float64)))
     return GridSpec(models=tuple(models), hardware=tuple(hardware),
                     scenarios=tuple(scens), scenario_names=scen_names,
-                    bw_scale=bw, b_cap=cap, n_f=nf)
+                    bw_scale=bw, b_cap=cap, n_f=nf,
+                    weight_bytes=float(weight_bytes))
 
 
 def tile_spans(shape: Sequence[int],
@@ -364,8 +379,12 @@ def _evaluate_span(spec: GridSpec, offsets: Sequence[int],
         tok_pe = b_rank / g_local
 
         # --- grouped-GEMM roofline (budget.*, hfu_bound.hfu_point) ---------
+        # weight_bytes multiplies LAST, mirroring the scalar core's operation
+        # order exactly (×1.0 is a bitwise identity, keeping the default
+        # grid byte-equal to the pre-quantization sweep).
+        wb = spec.weight_bytes
         flops = 6.0 * g_local * tok_pe * H * M
-        mem = 3.0 * g_local * H * M
+        mem = 3.0 * g_local * H * M * wb
         t_comp = flops / (peak * 1.0)
         t_mem = mem / hbm_bw
         t_gemm = np.maximum(t_comp, t_mem)
@@ -377,7 +396,7 @@ def _evaluate_span(spec: GridSpec, offsets: Sequence[int],
         intensity = np.where(mem > 0, flops / mem, 0.0)
 
         # --- memory feasibility (hfu_bound.memory_feasible) ----------------
-        expert_bytes = 3.0 * H * M * E * moe_layers * 1.0
+        expert_bytes = 3.0 * H * M * E * moe_layers * wb
         capacity = 0.8 * hbm_cap * nf_b * g
         feasible = expert_bytes <= capacity
 
@@ -445,7 +464,8 @@ def sweep_tiles(models, hardware, n_f=None, scenarios="default",
                 bw_scale: Union[float, Sequence[float]] = 1.0,
                 b_cap: Union[None, float, Sequence[float]] = None,
                 tile_points: int = DEFAULT_TILE_POINTS,
-                processes: Optional[int] = None) -> Iterator[SweepTile]:
+                processes: Optional[int] = None,
+                weight_bytes: float = 1.0) -> Iterator[SweepTile]:
     """Stream the §3 sweep as memory-bounded tiles (see module doc).
 
     Yields :class:`SweepTile` blocks covering the full grid exactly once,
@@ -455,7 +475,8 @@ def sweep_tiles(models, hardware, n_f=None, scenarios="default",
     span axes are model × hardware, so large multi-model searches spread
     across cores.
     """
-    spec = resolve_grid(models, hardware, n_f, scenarios, bw_scale, b_cap)
+    spec = resolve_grid(models, hardware, n_f, scenarios, bw_scale, b_cap,
+                        weight_bytes=weight_bytes)
     yield from tiles_from_grid(spec, tile_points=tile_points,
                                processes=processes)
 
@@ -486,14 +507,16 @@ def sweep(models, hardware, n_f=None, scenarios="default",
           bw_scale: Union[float, Sequence[float]] = 1.0,
           b_cap: Union[None, float, Sequence[float]] = None,
           tile_points: int = DEFAULT_TILE_POINTS,
-          processes: Optional[int] = None) -> SweepResult:
+          processes: Optional[int] = None,
+          weight_bytes: float = 1.0) -> SweepResult:
     """Vectorized §3 sweep over the full parameter grid. See module doc.
 
     A thin concatenating wrapper over :func:`sweep_tiles`: the dense
     result arrays are allocated once and filled tile by tile, so the
     evaluation working set stays bounded regardless of grid size.
     """
-    spec = resolve_grid(models, hardware, n_f, scenarios, bw_scale, b_cap)
+    spec = resolve_grid(models, hardware, n_f, scenarios, bw_scale, b_cap,
+                        weight_bytes=weight_bytes)
     fields: Dict[str, np.ndarray] = {}
     for tile in tiles_from_grid(spec, tile_points=tile_points,
                                 processes=processes):
@@ -506,7 +529,8 @@ def sweep(models, hardware, n_f=None, scenarios="default",
                        scenarios=spec.scenarios,
                        scenario_names=spec.scenario_names,
                        bw_scale=spec.bw_scale, b_cap=spec.b_cap,
-                       n_f=spec.n_f, fields=fields)
+                       n_f=spec.n_f, fields=fields,
+                       weight_bytes=spec.weight_bytes)
 
 
 def run_named_sweep(name: str, **overrides) -> SweepResult:
@@ -517,7 +541,8 @@ def run_named_sweep(name: str, **overrides) -> SweepResult:
 
 
 def scalar_reference(models, hardware, n_f=None, scenarios="default",
-                     bw_scale=1.0, b_cap=None) -> SweepResult:
+                     bw_scale=1.0, b_cap=None,
+                     weight_bytes: float = 1.0) -> SweepResult:
     """The equivalent per-point Python loop over ``hfu_bound.hfu_point``.
 
     Ground truth for the equivalence tests and the baseline for the
@@ -551,7 +576,8 @@ def scalar_reference(models, hardware, n_f=None, scenarios="default",
         hw = registry.resolve_hardware(h, bw_scale=float(b))
         for n, nf_val in enumerate(nf):
             pt = hb.hfu_point(m, hw, int(nf_val), s,
-                              b_cap=None if np.isinf(bc) else float(bc))
+                              b_cap=None if np.isinf(bc) else float(bc),
+                              weight_bytes=weight_bytes)
             idx = (i, j, k, l, c, n)
             fields["feasible"][idx] = pt.feasible
             fields["b_rank"][idx] = pt.b_rank
@@ -570,4 +596,5 @@ def scalar_reference(models, hardware, n_f=None, scenarios="default",
         fields["t_budget"][i, :, k] = stage_budget(m, s)
     return SweepResult(models=tuple(models), hardware=tuple(hardware),
                        scenarios=tuple(scens), scenario_names=scen_names,
-                       bw_scale=bw, b_cap=cap, n_f=nf, fields=fields)
+                       bw_scale=bw, b_cap=cap, n_f=nf, fields=fields,
+                       weight_bytes=float(weight_bytes))

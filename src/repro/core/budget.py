@@ -28,6 +28,30 @@ DISPATCH_BYTES_PER_ELEM = 1
 COMBINE_BYTES_PER_ELEM = 2
 WIRE_BYTES_PER_ELEM = DISPATCH_BYTES_PER_ELEM + COMBINE_BYTES_PER_ELEM  # = 3
 
+# Expert-weight residency widths (bytes per parameter). The paper's Eq. 6
+# analysis assumes fp8 (1 B) expert weights; the kernel layer now also ships
+# int8 and packed-int4 paths (kernels/grouped_gemm.py), and each width moves
+# the grouped GEMM's arithmetic intensity — and with it the dead-zone
+# boundary — by scaling Mem = 3·G·H·M·bytes_per_param.
+WEIGHT_BYTES_PER_PARAM = {
+    "f32": 4.0,
+    "bf16": 2.0,
+    "f16": 2.0,
+    "fp8": 1.0,
+    "int8": 1.0,
+    "int4": 0.5,
+}
+
+
+def weight_bytes_per_param(dtype_name: str) -> float:
+    """Bytes per expert-weight parameter for a named storage width."""
+    try:
+        return WEIGHT_BYTES_PER_PARAM[dtype_name]
+    except KeyError:
+        raise ValueError(
+            f"unknown weight dtype {dtype_name!r}; expected one of "
+            f"{sorted(WEIGHT_BYTES_PER_PARAM)}") from None
+
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
@@ -68,13 +92,16 @@ def grouped_gemm_flops(n_groups: int, tokens_per_group: float,
     return 6.0 * n_groups * tokens_per_group * hidden * inter
 
 
-def grouped_gemm_bytes(n_groups: int, hidden: int, inter: int) -> float:
-    """Weight bytes of the two grouped GEMMs (paper §3.2): Mem = 3·G·H·M.
+def grouped_gemm_bytes(n_groups: int, hidden: int, inter: int,
+                       bytes_per_param: float = 1.0) -> float:
+    """Weight bytes of the two grouped GEMMs (paper §3.2): Mem = 3·G·H·M·w.
 
-    3·H·M per expert = fused up+gate (H·2M) + down (M·H) at 1 B/elem (fp8);
-    activation tensors neglected (paper §2.3).
+    3·H·M per expert = fused up+gate (H·2M) + down (M·H) at ``bytes_per_param``
+    bytes per element (1.0 = the paper's fp8 assumption; see
+    WEIGHT_BYTES_PER_PARAM for the quantized-kernel widths); activation
+    tensors neglected (paper §2.3).
     """
-    return 3.0 * n_groups * hidden * inter
+    return 3.0 * n_groups * hidden * inter * bytes_per_param
 
 
 def gemm_time_roofline(flops: float, mem_bytes: float, hw: HardwareSpec,
@@ -111,13 +138,15 @@ class StageMetrics:
 
 def ffn_stage_metrics(model: MoEModelSpec, hw: HardwareSpec,
                       tokens_per_rank: float, local_experts: int,
-                      t_budget: float) -> StageMetrics:
+                      t_budget: float,
+                      weight_bytes: float = 1.0) -> StageMetrics:
     """Metrics for one rank's MoE stage given its token inflow within t_B."""
     g = max(local_experts, 1)
     b_per_expert = tokens_per_rank / g
     flops = grouped_gemm_flops(g, b_per_expert, model.hidden_size,
                                model.moe_intermediate)
-    mem = grouped_gemm_bytes(g, model.hidden_size, model.moe_intermediate)
+    mem = grouped_gemm_bytes(g, model.hidden_size, model.moe_intermediate,
+                             bytes_per_param=weight_bytes)
     t_gemm = gemm_time_roofline(flops, mem, hw)
     return StageMetrics(flops=flops, t_gemm=t_gemm, t_budget=t_budget,
                         peak_flops=hw.peak_flops)

@@ -69,12 +69,19 @@ def default_n_f_max(model: MoEModelSpec, hw: HardwareSpec) -> int:
 
 def hfu_point(model: MoEModelSpec, hw: HardwareSpec, n_f: int,
               scen: Optional[bdg.Scenario] = None,
-              b_cap: Optional[float] = None) -> HFUPoint:
+              b_cap: Optional[float] = None,
+              weight_bytes: float = 1.0) -> HFUPoint:
     """One (model, hardware, N_F) cell of the Fig. 4 sweep.
 
     ``b_cap`` optionally caps the Eq. 9 token inflow per rank — modelling a
     deployment whose offered decode batch is smaller than what the
     interconnect could deliver within t_B.
+
+    ``weight_bytes`` is the expert-weight storage width in bytes/param
+    (1.0 = the paper's fp8 baseline; see budget.WEIGHT_BYTES_PER_PARAM).
+    Narrower weights raise the Eq. 6 arithmetic intensity AND shrink the
+    HBM-residency footprint, so both the roofline memory term and the
+    feasibility test move together.
     """
     scen = scen or bdg.Scenario()
     t_b = bdg.stage_budget(model, scen)
@@ -86,7 +93,8 @@ def hfu_point(model: MoEModelSpec, hw: HardwareSpec, n_f: int,
     flops = bdg.grouped_gemm_flops(g_local, tokens_per_expert,
                                    model.hidden_size, model.moe_intermediate)
     mem = bdg.grouped_gemm_bytes(g_local, model.hidden_size,
-                                 model.moe_intermediate)
+                                 model.moe_intermediate,
+                                 bytes_per_param=weight_bytes)
     t_gemm = bdg.gemm_time_roofline(flops, mem, hw)
     # The budget window truncates nothing here — if t_gemm > t_B the point is
     # simply infeasible under the SLO; we clamp S_t at 1 and flag it.
@@ -110,7 +118,8 @@ def hfu_point(model: MoEModelSpec, hw: HardwareSpec, n_f: int,
         bottleneck = "interconnect" if t_compute >= t_hbm else "hbm"
     return HFUPoint(
         n_f=n_f,
-        feasible=memory_feasible(model, hw, n_f),
+        feasible=memory_feasible(model, hw, n_f,
+                                 bytes_per_param=weight_bytes),
         b_rank=inflow,
         local_experts=g_local,
         tokens_per_expert=tokens_per_expert,
@@ -125,22 +134,25 @@ def hfu_point(model: MoEModelSpec, hw: HardwareSpec, n_f: int,
 
 def hfu_sweep(model: MoEModelSpec, hw: HardwareSpec,
               scen: Optional[bdg.Scenario] = None,
-              n_f_max: Optional[int] = None) -> List[HFUPoint]:
+              n_f_max: Optional[int] = None,
+              weight_bytes: float = 1.0) -> List[HFUPoint]:
     """Fig. 4: HFU upper bound vs N_F for one (model, platform)."""
     if n_f_max is None:
         n_f_max = default_n_f_max(model, hw)
-    return [hfu_point(model, hw, n_f, scen) for n_f in range(1, n_f_max + 1)]
+    return [hfu_point(model, hw, n_f, scen, weight_bytes=weight_bytes)
+            for n_f in range(1, n_f_max + 1)]
 
 
 def hfu_ceiling(model: MoEModelSpec, hw: HardwareSpec,
                 scen: Optional[bdg.Scenario] = None,
-                feasible_only: bool = True) -> HFUPoint:
+                feasible_only: bool = True,
+                weight_bytes: float = 1.0) -> HFUPoint:
     """The best achievable HFU point over all N_F (the Fig. 4 envelope).
 
     ``feasible_only`` restricts to N_F where expert weights fit in HBM
     (paper's "HBM - DeepSeek-V3" annotations mark the infeasible ones).
     """
-    pts = hfu_sweep(model, hw, scen)
+    pts = hfu_sweep(model, hw, scen, weight_bytes=weight_bytes)
     pool = [p for p in pts if p.feasible] if feasible_only else pts
     if not pool:
         pool = pts  # nothing fits: report the (infeasible) envelope anyway
@@ -149,13 +161,19 @@ def hfu_ceiling(model: MoEModelSpec, hw: HardwareSpec,
 
 def dead_zone(model: MoEModelSpec, hw: HardwareSpec,
               scen: Optional[bdg.Scenario] = None,
-              tol: float = 0.02) -> List[int]:
+              tol: float = 0.02,
+              weight_bytes: float = 1.0) -> List[int]:
     """N_F values in the dead zone: adding FFN nodes no longer moves HFU.
 
     Defined as the suffix of the sweep (past the scale-out knee) where HFU is
     within ``tol`` (relative) of its running plateau while S_t strictly falls.
+
+    ``weight_bytes`` moves the boundary: narrower expert weights raise the
+    grouped GEMM's arithmetic intensity, so the HBM term leaves the roofline
+    earlier and the plateau starts at a different N_F — the kernel-level
+    quantization paths are a *planning* lever, not just a speedup.
     """
-    pts = hfu_sweep(model, hw, scen)
+    pts = hfu_sweep(model, hw, scen, weight_bytes=weight_bytes)
     if not pts:
         return []
     zone: List[int] = []
@@ -166,6 +184,15 @@ def dead_zone(model: MoEModelSpec, hw: HardwareSpec,
                 cr.REGIME_SCALE_OUT_BOUND, cr.REGIME_MAX_INTENSITY):
             zone.append(cur.n_f)
     return zone
+
+
+def dead_zone_boundary(model: MoEModelSpec, hw: HardwareSpec,
+                       scen: Optional[bdg.Scenario] = None,
+                       tol: float = 0.02,
+                       weight_bytes: float = 1.0) -> Optional[int]:
+    """First N_F inside the dead zone (None if the sweep never plateaus)."""
+    zone = dead_zone(model, hw, scen, tol=tol, weight_bytes=weight_bytes)
+    return min(zone) if zone else None
 
 
 def superpod_hfu_closed_form(model: MoEModelSpec, hw: HardwareSpec) -> float:

@@ -26,7 +26,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Literal
 
 _EPS = 1e-12
 

@@ -12,7 +12,7 @@ shardings) lives in ``repro.configs`` / ``repro.models``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 
 @dataclasses.dataclass(frozen=True)

@@ -24,7 +24,6 @@ import math
 from typing import List, Optional
 
 from repro.core import budget as bdg
-from repro.core import comm_roofline as cr
 from repro.core import hfu_bound as hb
 from repro.core import imbalance as imb
 from repro.core.hardware import HardwareSpec
@@ -115,8 +114,14 @@ def plan_afd(model: MoEModelSpec, hw: HardwareSpec,
              scen: Optional[bdg.Scenario] = None,
              prof: Optional[AttentionProfile] = None,
              n_f: Optional[int] = None,
-             max_total_nodes: int = 512) -> AFDPlan:
-    """Produce the best AFD plan (or the plan at a forced ``n_f``)."""
+             max_total_nodes: int = 512,
+             weight_bytes: float = 1.0) -> AFDPlan:
+    """Produce the best AFD plan (or the plan at a forced ``n_f``).
+
+    ``weight_bytes`` is the expert-weight width in bytes/param (Eq. 6's Mem
+    term and the HBM feasibility test both scale with it — quantized expert
+    kernels change which N_F the planner picks, not just how fast it runs).
+    """
     if not model.is_moe:
         raise PlanningError(
             f"{model.name} has no routed experts; AFD degenerates to a dense "
@@ -126,7 +131,9 @@ def plan_afd(model: MoEModelSpec, hw: HardwareSpec,
     prof = prof or AttentionProfile(hidden=model.hidden_size)
 
     candidates = ([n_f] if n_f is not None else
-                  [p.n_f for p in hb.hfu_sweep(model, hw, scen) if p.feasible])
+                  [p.n_f for p in hb.hfu_sweep(model, hw, scen,
+                                               weight_bytes=weight_bytes)
+                   if p.feasible])
     if not candidates:
         raise PlanningError(
             f"{model.name} expert weights do not fit any N_F ≤ sweep limit "
@@ -134,7 +141,7 @@ def plan_afd(model: MoEModelSpec, hw: HardwareSpec,
 
     best: Optional[AFDPlan] = None
     for cand in candidates:
-        pt = hb.hfu_point(model, hw, cand, scen)
+        pt = hb.hfu_point(model, hw, cand, scen, weight_bytes=weight_bytes)
         ffn_tokens = pt.b_rank * cand * hw.gpus_per_node
         a_tok = attention_tokens_per_node(model, hw, t_b, prof)
         n_a = max(1, math.ceil(ffn_tokens / a_tok))

@@ -22,29 +22,68 @@ and no padding compute is wasted on expert boundaries:
     consecutive visits that share an m-tile;
   * the accumulator flushes to HBM on the last visit of each tile.
 
+Fused router permute (Megatron-MoE's permute-fused grouped GEMM, adapted
+to the visit grid):
+
+  * ``row_index`` (M,) fuses the dispatch *gather*: GEMM row r reads
+    ``lhs[row_index[r]]``, so the router's sorted token order never has to
+    be materialized in HBM. The permutation rides the scalar-prefetch
+    channel; the kernel row-gathers from the resident k-slab of the token
+    buffer (interpret-friendly lowering of the per-row DMA — on real TPU
+    the same scalars steer `make_async_copy` row descriptors).
+  * ``out_index`` (M,) fuses the combine-side *unpermute scatter*: the
+    accumulator epilogue scatters GEMM row r to ``out[out_index[r]]``
+    instead of writing tile-contiguous rows, returning outputs already in
+    token order. Destinations must be unique per valid row (a permutation,
+    which router unpermute always is).
+
+Quantized weight paths (both shift the Eq. 6 operating point — weight
+bytes drop 2–8× vs bf16, so the FFN's arithmetic intensity and with it the
+paper's dead-zone boundary move; see core/budget.weight_bytes_per_param):
+
+  * int8  — ``rhs`` holds int8 codes with per-expert scales (G,);
+  * int4  — ``rhs`` holds two 4-bit codes packed per int8 along K
+    (G, K//2, N) with per-expert-per-``tile_n``-block scales (G, N/block);
+    the kernel unpacks nibbles (sign-extended via the (x^8)-8 trick) and
+    dequantises in VMEM.
+
 VMEM budget per grid step: lhs tile (tile_m × tile_k) + rhs block
 (tile_k × tile_n) + f32 accumulator (tile_m × tile_n) — with the default
 128×128×512 tiling ≈ 0.5 MB, comfortably inside the ~16 MB v5e VMEM so the
-pipeline can double-buffer.
+pipeline can double-buffer. The fused gather/scatter variants instead keep
+the full token slab (rows × tile_k) / output slab (rows × tile_n) resident,
+which is the right trade at decode token counts (≤ a few thousand rows).
 
 Validated in interpret mode on CPU against ``ref.grouped_gemm_ref`` over
-shape/dtype sweeps (tests/test_kernels_grouped_gemm.py).
+shape/dtype sweeps (tests/test_kernels_grouped_gemm.py,
+tests/test_kernels_quant.py).
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+MXU_SUBLANE = 8                 # f32 sublane multiple of the MXU tile
 
 
 def _cdiv(a: int, b: int) -> int:
     return (a + b - 1) // b
+
+
+def clamp_tile_m(tile_m: int, m: int) -> int:
+    """min(tile_m, m) rounded UP to the 8-row MXU sublane multiple.
+
+    A bare ``min(tile_m, m)`` silently mis-tiles when it leaves a
+    non-MXU-aligned row count (e.g. m=5 → tile_m=5): Mosaic either rejects
+    the block shape or pads each sublane load. Rounding the clamp up keeps
+    tiny-M grids one aligned tile (the zero padding is compute-safe).
+    """
+    return _cdiv(max(1, min(tile_m, m)), MXU_SUBLANE) * MXU_SUBLANE
 
 
 def build_visits(group_sizes: jax.Array, m: int, tile_m: int,
@@ -90,62 +129,23 @@ def build_visits(group_sizes: jax.Array, m: int, tile_m: int,
     vm = jnp.minimum(vm, n_tiles - 1)
     vg = first_group[vm] + (v_idx - starts[vm])
     # Surplus slots (v >= total): clamp to a valid (tile, group) pair with an
-    # empty mask — reuse the tile's first group but mark via vg clamp; the
-    # kernel masks rows by [offsets[g], offsets[g+1]) ∩ tile, and for
-    # duplicated pairs the accumulation of the same group twice must be
-    # avoided, so point them at group n_groups-1 row-range ∩ tile which is
-    # empty for all but the last tile; to be safe use an explicit
-    # empty marker: vg = n_groups (kernel masks everything out).
+    # empty mask — the kernel masks rows by [offsets[g], offsets[g+1)) ∩ tile
+    # and treats vg == n_groups as an explicit empty marker.
     vg = jnp.where(v_idx < total, vg, n_groups)
     vg = jnp.minimum(vg, n_groups).astype(jnp.int32)
     return vm, vg, offsets
 
 
-def _kernel(visit_m, visit_g, offsets,     # scalar-prefetch refs
-            lhs_ref, rhs_ref, out_ref,     # VMEM blocks
-            acc_ref,                       # f32 VMEM scratch
-            *, tile_m: int, n_groups: int, m_total: int,
-            n_k_tiles: int, out_dtype, scale_ref=None):
-    v = pl.program_id(1)
-    kt = pl.program_id(2)
-    n_visits = pl.num_programs(1)
+def _unpack_int4(packed: jax.Array, tile_k: int, tile_n: int) -> jax.Array:
+    """(tile_k//2, tile_n) packed nibbles → (tile_k, tile_n) int32 codes.
 
-    g = visit_g[v]
-    mt = visit_m[v]
-
-    # First (visit, k-tile) touching this output block initialises the
-    # accumulator. Visits sharing an m-tile are consecutive in v.
-    is_first_visit = jnp.logical_or(v == 0, visit_m[jnp.maximum(v - 1, 0)] != mt)
-
-    @pl.when(jnp.logical_and(is_first_visit, kt == 0))
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    # Row mask: rows of this tile belonging to group g.
-    rows = mt * tile_m + jax.lax.broadcasted_iota(jnp.int32, (tile_m, 1), 0)
-    valid = jnp.logical_and(g < n_groups, rows < m_total)
-    lo = offsets[jnp.minimum(g, n_groups - 1)]
-    hi = offsets[jnp.minimum(g + 1, n_groups)]
-    mask = jnp.logical_and(valid,
-                           jnp.logical_and(rows >= lo, rows < hi))
-
-    x = jnp.where(mask, lhs_ref[...], jnp.zeros_like(lhs_ref))
-    w = rhs_ref[0]
-    if scale_ref is not None:
-        # int8 weight-only quantization: dequantise the VMEM tile with the
-        # per-expert scale. HBM→VMEM weight traffic halves vs bf16 — the
-        # §Perf H1 "memory-floor" lever (EXPERIMENTS.md).
-        w = w.astype(jnp.float32) * scale_ref[0]
-    acc_ref[...] += jnp.dot(x.astype(jnp.float32) if scale_ref is not None
-                            else x, w, preferred_element_type=jnp.float32)
-
-    # Flush on the last (visit, k-tile) for this m-tile.
-    is_last_visit = jnp.logical_or(
-        v == n_visits - 1, visit_m[jnp.minimum(v + 1, n_visits - 1)] != mt)
-
-    @pl.when(jnp.logical_and(is_last_visit, kt == n_k_tiles - 1))
-    def _flush():
-        out_ref[...] = acc_ref[...].astype(out_dtype)
+    Low nibble holds the even-K code, high nibble the odd-K code; both are
+    sign-extended from 4 bits via the (x ^ 8) - 8 two's-complement trick.
+    """
+    w32 = packed.astype(jnp.int32) & 0xFF
+    lo = ((w32 & 0xF) ^ 8) - 8
+    hi = (((w32 >> 4) & 0xF) ^ 8) - 8
+    return jnp.stack([lo, hi], axis=1).reshape(tile_k, tile_n)
 
 
 def grouped_gemm_pallas(lhs: jax.Array, rhs: jax.Array,
@@ -154,79 +154,228 @@ def grouped_gemm_pallas(lhs: jax.Array, rhs: jax.Array,
                         tile_k: Optional[int] = 512,
                         out_dtype=None,
                         scales: Optional[jax.Array] = None,
+                        row_index: Optional[jax.Array] = None,
+                        out_index: Optional[jax.Array] = None,
+                        out_rows: Optional[int] = None,
                         interpret: bool = True) -> jax.Array:
     """Grouped GEMM via the visit-steered Pallas kernel.
 
-    ``scales`` (G,) enables int8 weight-only quantization: ``rhs`` holds
-    int8 codes and the kernel dequantises each expert's VMEM tile with its
-    per-expert scale (out = lhs · (rhs·scale[g])).
+    Weight quantization (inferred from ``scales``):
+      * ``scales`` (G,)   — int8 codes in ``rhs`` (G, K, N), per-expert
+        dequant ``out = lhs · (rhs·scale[g])``;
+      * ``scales`` (G, B) — int4 nibbles packed two-per-int8 in ``rhs``
+        (G, K//2, N), per-(expert, tile_n-block) scales; requires
+        ``tile_n == N / B`` (quantize with ``block_n == tile_n``).
+
+    Fused router permute:
+      * ``row_index`` (M,) — GEMM row r consumes ``lhs[row_index[r]]``
+        (``lhs`` then has the *token* row count, not M);
+      * ``out_index`` (M,) — GEMM row r lands in ``out[out_index[r]]``
+        (a permutation over valid rows; ``out_rows`` sets the output row
+        count, default M). Un-targeted rows are zero.
 
     ``interpret=True`` (the default in this CPU container) runs the kernel
     body in the Pallas interpreter; on real TPU pass ``interpret=False``.
     """
-    m, k = lhs.shape
-    g, k2, n = rhs.shape
-    assert k == k2, (lhs.shape, rhs.shape)
+    int4 = scales is not None and scales.ndim == 2
+    g = rhs.shape[0]
+    k = lhs.shape[1]
+    n = rhs.shape[2]
+    if int4:
+        if rhs.shape[1] * 2 != k:
+            raise ValueError(
+                f"int4 rhs packs two codes per byte along K: expected "
+                f"(G, {k}//2, N), got {rhs.shape}")
+    else:
+        assert k == rhs.shape[1], (lhs.shape, rhs.shape)
     assert group_sizes.shape == (g,)
+    m = lhs.shape[0] if row_index is None else int(row_index.shape[0])
     out_dtype = out_dtype or lhs.dtype
 
-    tile_m = min(tile_m, m)
+    tile_m = clamp_tile_m(tile_m, m)
     tile_n = min(tile_n, n)
     tile_k = k if tile_k is None else min(tile_k, k)
+    if int4:
+        if tile_k % 2:
+            raise ValueError(f"int4 path needs an even tile_k, got {tile_k}")
+        n_blocks = scales.shape[1]
+        if n_blocks != _cdiv(n, tile_n):
+            raise ValueError(
+                f"int4 scales carry {n_blocks} N-blocks but tile_n={tile_n} "
+                f"tiles N={n} into {_cdiv(n, tile_n)} — quantize with "
+                f"block_n == tile_n")
     # Pad every dim to its tile multiple (zero padding is compute-safe).
     m_pad = _cdiv(m, tile_m) * tile_m
     n_pad = _cdiv(n, tile_n) * tile_n
     k_pad = _cdiv(k, tile_k) * tile_k
-    lhs_p = jnp.pad(lhs, ((0, m_pad - m), (0, k_pad - k)))
-    rhs_p = jnp.pad(rhs, ((0, 0), (0, k_pad - k), (0, n_pad - n)))
+    if row_index is None:
+        lhs_p = jnp.pad(lhs, ((0, m_pad - m), (0, k_pad - k)))
+    else:
+        # Fused gather: the kernel keeps the whole token slab's k-slice
+        # resident and row-gathers it by the prefetched permutation.
+        src_rows = lhs.shape[0]
+        src_pad = _cdiv(src_rows, MXU_SUBLANE) * MXU_SUBLANE
+        lhs_p = jnp.pad(lhs, ((0, src_pad - src_rows), (0, k_pad - k)))
+    if int4:
+        rhs_p = jnp.pad(rhs, ((0, 0), (0, k_pad // 2 - rhs.shape[1]),
+                              (0, n_pad - n)))
+    else:
+        rhs_p = jnp.pad(rhs, ((0, 0), (0, k_pad - k), (0, n_pad - n)))
 
     visit_m, visit_g, offsets = build_visits(group_sizes, m, tile_m, g)
     n_visits = int(visit_m.shape[0])
     n_k_tiles = k_pad // tile_k
     grid = (n_pad // tile_n, n_visits, n_k_tiles)
 
-    kernel = functools.partial(
-        _kernel, tile_m=tile_m, n_groups=g, m_total=m,
-        n_k_tiles=n_k_tiles, out_dtype=out_dtype)
-    if scales is not None:
-        def kernel(vm, vg, off, lhs_ref, rhs_ref, scale_ref, out_ref,
-                   acc_ref):
-            return _kernel(vm, vg, off, lhs_ref, rhs_ref, out_ref, acc_ref,
-                           tile_m=tile_m, n_groups=g, m_total=m,
-                           n_k_tiles=n_k_tiles, out_dtype=out_dtype,
-                           scale_ref=scale_ref)
+    scatter = out_index is not None
+    o_rows = m if out_rows is None else int(out_rows)
+    o_pad = (_cdiv(o_rows, MXU_SUBLANE) * MXU_SUBLANE if scatter else m_pad)
 
-    in_specs = [
-        pl.BlockSpec((tile_m, tile_k),
-                     lambda j, v, kt, vm, vg, off: (vm[v], kt)),
-        # vg == g marks an empty surplus visit; clamp the DMA index
-        # into range — the kernel's row mask zeroes its contribution.
-        pl.BlockSpec((1, tile_k, tile_n),
-                     lambda j, v, kt, vm, vg, off:
-                     (jnp.minimum(vg[v], g - 1), kt, j)),
-    ]
-    operands = [visit_m, visit_g, offsets, lhs_p, rhs_p]
+    # Scalar-prefetch operands: visit steering + optional permutations.
+    prefetch = [visit_m, visit_g, offsets]
+    if row_index is not None:
+        idx_p = jnp.pad(row_index.astype(jnp.int32), (0, m_pad - m))
+        prefetch.append(jnp.minimum(idx_p, lhs_p.shape[0] - 1))
+    if scatter:
+        oidx_p = jnp.pad(out_index.astype(jnp.int32), (0, m_pad - m))
+        prefetch.append(jnp.minimum(oidx_p, o_pad - 1))
+    n_pref = len(prefetch)
+    row_pos = 3 if row_index is not None else None
+    oidx_pos = (3 + (row_index is not None)) if scatter else None
+
+    def kernel(*refs):
+        pref = refs[:n_pref]
+        vm_ref, vg_ref, off_ref = pref[0], pref[1], pref[2]
+        ins = refs[n_pref:-2]
+        lhs_ref, rhs_ref = ins[0], ins[1]
+        scale_ref = ins[2] if scales is not None else None
+        out_ref, acc_ref = refs[-2], refs[-1]
+
+        v = pl.program_id(1)
+        kt = pl.program_id(2)
+        n_vis = pl.num_programs(1)
+        gid = vg_ref[v]
+        mt = vm_ref[v]
+
+        if scatter:
+            # The output block is the full row slab for this n-tile; zero it
+            # once at the first grid step of each j before any flush lands.
+            @pl.when(jnp.logical_and(v == 0, kt == 0))
+            def _zero():
+                out_ref[...] = jnp.zeros_like(out_ref)
+
+        # First (visit, k-tile) touching this output tile initialises the
+        # accumulator. Visits sharing an m-tile are consecutive in v.
+        is_first = jnp.logical_or(v == 0,
+                                  vm_ref[jnp.maximum(v - 1, 0)] != mt)
+
+        @pl.when(jnp.logical_and(is_first, kt == 0))
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        # Row mask: rows of this tile belonging to group gid.
+        rows = mt * tile_m + jax.lax.broadcasted_iota(
+            jnp.int32, (tile_m, 1), 0)
+        valid = jnp.logical_and(gid < g, rows < m)
+        lo = off_ref[jnp.minimum(gid, g - 1)]
+        hi = off_ref[jnp.minimum(gid + 1, g)]
+        mask = jnp.logical_and(valid,
+                               jnp.logical_and(rows >= lo, rows < hi))
+
+        if row_pos is not None:
+            src = pref[row_pos][pl.ds(mt * tile_m, tile_m)]
+            x = jnp.take(lhs_ref[...], src, axis=0)
+        else:
+            x = lhs_ref[...]
+        x = jnp.where(mask, x, jnp.zeros_like(x))
+
+        w = rhs_ref[0]
+        if scale_ref is None:
+            acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+        else:
+            if int4:
+                w = (_unpack_int4(w, tile_k, tile_n).astype(jnp.float32)
+                     * scale_ref[0, 0])
+            else:
+                # int8 weight-only quantization: dequantise the VMEM tile
+                # with the per-expert scale. HBM→VMEM weight traffic halves
+                # vs bf16 — the §Perf H1 "memory-floor" lever.
+                w = w.astype(jnp.float32) * scale_ref[0]
+            acc_ref[...] += jnp.dot(x.astype(jnp.float32), w,
+                                    preferred_element_type=jnp.float32)
+
+        # Flush on the last (visit, k-tile) for this m-tile.
+        is_last = jnp.logical_or(
+            v == n_vis - 1, vm_ref[jnp.minimum(v + 1, n_vis - 1)] != mt)
+
+        @pl.when(jnp.logical_and(is_last, kt == n_k_tiles - 1))
+        def _flush():
+            if scatter:
+                # Unpermute epilogue: scatter the finished tile's rows to
+                # their token-order destinations. Valid destinations are
+                # unique (a permutation), so the adds never collide; invalid
+                # rows contribute zero to row 0.
+                rvalid = rows[:, 0] < m
+                dest = pref[oidx_pos][pl.ds(mt * tile_m, tile_m)]
+                dest = jnp.where(rvalid, dest, 0)
+                vals = jnp.where(rvalid[:, None], acc_ref[...],
+                                 jnp.zeros_like(acc_ref)).astype(out_dtype)
+                out_ref[...] = out_ref[...].at[dest].add(vals)
+            else:
+                out_ref[...] = acc_ref[...].astype(out_dtype)
+
+    def _lhs_index(j, v, kt, *pref):
+        if row_pos is not None:
+            return (0, kt)               # whole token slab, k-slice kt
+        return (pref[0][v], kt)          # visit's m-tile
+
+    def _rhs_index(j, v, kt, *pref):
+        # vg == g marks an empty surplus visit; clamp the DMA index into
+        # range — the kernel's row mask zeroes its contribution.
+        return (jnp.minimum(pref[1][v], g - 1), kt, j)
+
+    def _out_index(j, v, kt, *pref):
+        if scatter:
+            return (0, j)                # whole output slab, n-tile j
+        return (pref[0][v], j)
+
+    lhs_block = ((lhs_p.shape[0], tile_k) if row_pos is not None
+                 else (tile_m, tile_k))
+    rhs_block = (1, tile_k // 2, tile_n) if int4 else (1, tile_k, tile_n)
+    in_specs = [pl.BlockSpec(lhs_block, _lhs_index),
+                pl.BlockSpec(rhs_block, _rhs_index)]
+    operands = prefetch + [lhs_p, rhs_p]
     if scales is not None:
-        in_specs.append(pl.BlockSpec(
-            (1,), lambda j, v, kt, vm, vg, off:
-            (jnp.minimum(vg[v], g - 1),)))
+        if int4:
+            in_specs.append(pl.BlockSpec(
+                (1, 1), lambda j, v, kt, *pref:
+                (jnp.minimum(pref[1][v], g - 1), j)))
+        else:
+            in_specs.append(pl.BlockSpec(
+                (1,), lambda j, v, kt, *pref:
+                (jnp.minimum(pref[1][v], g - 1),)))
         operands.append(scales.astype(jnp.float32))
 
+    out_block = (o_pad, tile_n) if scatter else (tile_m, tile_n)
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=3,
+            num_scalar_prefetch=n_pref,
             grid=grid,
             in_specs=in_specs,
-            out_specs=pl.BlockSpec((tile_m, tile_n),
-                                   lambda j, v, kt, vm, vg, off: (vm[v], j)),
+            out_specs=pl.BlockSpec(out_block, _out_index),
             scratch_shapes=[pltpu.VMEM((tile_m, tile_n), jnp.float32)],
         ),
-        out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), out_dtype),
+        out_shape=jax.ShapeDtypeStruct((o_pad if scatter else m_pad, n_pad),
+                                       out_dtype),
         interpret=interpret,
     )(*operands)
-    return out[:m, :n]
+    return out[:o_rows if scatter else m, :n]
 
+
+# ---------------------------------------------------------------------------
+# Weight-only quantization (int8 per-expert, int4 per-expert-per-N-block)
+# ---------------------------------------------------------------------------
 
 def quantize_experts(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """Per-expert symmetric int8 quantization: w ≈ codes · scale[g]."""
@@ -236,3 +385,55 @@ def quantize_experts(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
                                scale[:, None, None]), -127, 127
                      ).astype(jnp.int8)
     return codes, scale
+
+
+def dequantize_experts(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    """Exact float form of the int8 codes the kernel sees."""
+    return codes.astype(jnp.float32) * scale[:, None, None]
+
+
+def quantize_experts_int4(w: jax.Array, block_n: int = 128
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric int4 quantization, two codes packed per int8 along K.
+
+    w: (G, K, N) with K even and N a multiple of ``block_n``. Returns
+    ``(packed (G, K//2, N) int8, scales (G, N//block_n) f32)`` where
+    ``w ≈ codes · scales[g, n // block_n]`` and codes ∈ [-7, 7]. Finer
+    per-N-block scales recover most of the range lost to 3-bit mantissas;
+    ``block_n`` must equal the kernel's ``tile_n`` so each weight tile
+    dequantises with a single scalar.
+    """
+    g, k, n = w.shape
+    if k % 2:
+        raise ValueError(f"int4 packing needs an even K, got {k}")
+    if n % block_n:
+        raise ValueError(f"N={n} must be a multiple of block_n={block_n}")
+    wf = w.astype(jnp.float32).reshape(g, k, n // block_n, block_n)
+    amax = jnp.max(jnp.abs(wf), axis=(1, 3))                 # (G, N/block)
+    scale = jnp.maximum(amax, 1e-8) / 7.0
+    codes = jnp.clip(jnp.round(wf / scale[:, None, :, None]), -7, 7
+                     ).astype(jnp.int32).reshape(g, k, n)
+    lo = codes[:, 0::2] & 0xF
+    hi = codes[:, 1::2] & 0xF
+    packed = (lo | (hi << 4))                                # [0, 255]
+    packed = ((packed ^ 128) - 128).astype(jnp.int8)         # two's complement
+    return packed, scale
+
+
+def unpack_experts_int4(packed: jax.Array) -> jax.Array:
+    """(G, K//2, N) packed nibbles → (G, K, N) int32 codes (test oracle)."""
+    g, kh, n = packed.shape
+    w32 = packed.astype(jnp.int32) & 0xFF
+    lo = ((w32 & 0xF) ^ 8) - 8
+    hi = (((w32 >> 4) & 0xF) ^ 8) - 8
+    return jnp.stack([lo, hi], axis=2).reshape(g, 2 * kh, n)
+
+
+def dequantize_experts_int4(packed: jax.Array, scale: jax.Array
+                            ) -> jax.Array:
+    """Exact float form of the packed int4 codes the kernel sees."""
+    codes = unpack_experts_int4(packed)
+    g, k, n = codes.shape
+    block_n = n // scale.shape[1]
+    cf = codes.astype(jnp.float32).reshape(g, k, scale.shape[1], block_n)
+    return (cf * scale[:, None, :, None]).reshape(g, k, n)

@@ -14,14 +14,16 @@ emulator, far too slow at production shapes) and ``pallas`` on TPU.
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune as _autotune
 from repro.kernels import ref as _ref
-from repro.kernels.grouped_gemm import grouped_gemm_pallas
+from repro.kernels.grouped_gemm import (dequantize_experts,
+                                        dequantize_experts_int4,
+                                        grouped_gemm_pallas)
 from repro.kernels.splitkv_attention import splitkv_attention_pallas
 
 _IMPLS = ("pallas", "xla", "ref")
@@ -41,24 +43,62 @@ def default_impl() -> str:
 
 def grouped_gemm(lhs: jax.Array, rhs: jax.Array, group_sizes: jax.Array,
                  impl: Optional[str] = None,
-                 tile_m: int = 128, tile_n: int = 128,
-                 tile_k: Optional[int] = 512) -> jax.Array:
+                 tile_m: Optional[int] = None, tile_n: Optional[int] = None,
+                 tile_k: Optional[int] = None,
+                 scales: Optional[jax.Array] = None,
+                 row_index: Optional[jax.Array] = None,
+                 out_index: Optional[jax.Array] = None,
+                 out_rows: Optional[int] = None) -> jax.Array:
     """out[r] = lhs[r] @ rhs[group_of(r)] for group-sorted rows.
 
     lhs: (M, K); rhs: (G, K, N); group_sizes: (G,) int32 summing to ≤ M
     (surplus rows produce zeros).
+
+    Optional extensions (see kernels/grouped_gemm.py for semantics):
+      * ``scales`` — weight-only quantization. (G,) means ``rhs`` holds
+        int8 codes; (G, B) means int4 codes packed two-per-int8 along K.
+      * ``row_index``/``out_index``/``out_rows`` — fused router permute:
+        row r consumes ``lhs[row_index[r]]`` and lands in
+        ``out[out_index[r]]``. Under ``pallas`` these fuse into the kernel;
+        ``xla``/``ref`` emulate with an explicit gather/scatter (same math,
+        so they stay drop-in oracles for the fused path).
+
+    Unpinned tile sizes are resolved from the autotune table keyed on
+    (E, tokens/expert, d_ff) — ``python -m repro tune`` populates it.
     """
     impl = impl or default_impl()
+    int4 = scales is not None and scales.ndim == 2
     if impl == "pallas":
+        m = lhs.shape[0] if row_index is None else row_index.shape[0]
+        at_m, at_n, at_k = _autotune.lookup(rhs.shape[0], m, rhs.shape[2])
+        tile_m = at_m if tile_m is None else tile_m
+        tile_n = at_n if tile_n is None else tile_n
+        tile_k = at_k if tile_k is None else tile_k
+        if int4:
+            # Each weight tile must dequantise with one scalar: force the
+            # n-tiling to the quantization block grid.
+            tile_n = rhs.shape[2] // scales.shape[1]
         interpret = jax.devices()[0].platform != "tpu"
         return grouped_gemm_pallas(lhs, rhs, group_sizes, tile_m=tile_m,
                                    tile_n=tile_n, tile_k=tile_k,
+                                   scales=scales, row_index=row_index,
+                                   out_index=out_index, out_rows=out_rows,
                                    interpret=interpret)
-    if impl == "xla":
-        out = jax.lax.ragged_dot(lhs, rhs, group_sizes.astype(jnp.int32))
+    if impl in ("xla", "ref"):
+        if scales is not None:
+            rhs = (dequantize_experts_int4(rhs, scales) if int4
+                   else dequantize_experts(rhs, scales))
+        if row_index is not None:
+            lhs = jnp.take(lhs, row_index, axis=0)
+        if impl == "xla":
+            out = jax.lax.ragged_dot(lhs, rhs, group_sizes.astype(jnp.int32))
+        else:
+            out = _ref.grouped_gemm_ref(lhs, rhs, group_sizes)
+        if out_index is not None:
+            n_out = out.shape[0] if out_rows is None else out_rows
+            out = jnp.zeros((n_out, out.shape[1]), out.dtype
+                            ).at[out_index].set(out[:out_index.shape[0]])
         return out
-    if impl == "ref":
-        return _ref.grouped_gemm_ref(lhs, rhs, group_sizes)
     raise ValueError(f"impl must be one of {_IMPLS}, got {impl!r}")
 
 

@@ -38,6 +38,27 @@ def grouped_gemm_ref(lhs: jax.Array, rhs: jax.Array,
     return out.astype(lhs.dtype if lhs.dtype == rhs.dtype else jnp.float32)
 
 
+def grouped_gemm_fused_ref(lhs: jax.Array, rhs: jax.Array,
+                           group_sizes: jax.Array,
+                           row_index: Optional[jax.Array] = None,
+                           out_index: Optional[jax.Array] = None,
+                           out_rows: Optional[int] = None) -> jax.Array:
+    """Oracle for the fused-permute grouped GEMM: explicit gather →
+    ``grouped_gemm_ref`` → explicit scatter.
+
+    GEMM row r consumes ``lhs[row_index[r]]`` and its result lands in
+    ``out[out_index[r]]`` (``out_index`` must hit distinct destinations
+    over valid rows — a router unpermute always does). Rows of ``out``
+    no GEMM row targets are zero.
+    """
+    x = lhs if row_index is None else jnp.take(lhs, row_index, axis=0)
+    y = grouped_gemm_ref(x, rhs, group_sizes)
+    if out_index is None:
+        return y
+    n_out = y.shape[0] if out_rows is None else out_rows
+    return jnp.zeros((n_out, y.shape[1]), y.dtype).at[out_index].set(y)
+
+
 def row_groups_ref(group_sizes: jax.Array, m: int) -> jax.Array:
     """group id per row (G for out-of-group padding rows)."""
     offsets = jnp.cumsum(group_sizes)

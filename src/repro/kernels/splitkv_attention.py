@@ -27,7 +27,6 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -23,21 +23,18 @@ For a MoE architecture's decode cell this driver:
 """
 
 import argparse
-import dataclasses
 import json
 import time
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
-from repro.core import budget as bdg
 from repro.core import overlap as ov
-from repro.core.hardware import (TPU_V5E_HBM_BW, TPU_V5E_ICI_BW,
-                                 TPU_V5E_PEAK_FLOPS)
+from repro.core.hardware import TPU_V5E_ICI_BW, TPU_V5E_PEAK_FLOPS
 from repro.kernels import ops as kops
 from repro.launch import hlo_analysis as hlo
 from repro.launch.mesh import CHIPS_PER_NODE, make_mesh

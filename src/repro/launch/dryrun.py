@@ -25,14 +25,12 @@ Usage:
 """
 
 import argparse
-import dataclasses
 import json
 import time
 import traceback
 from typing import Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs
 from repro.core import modelspec

@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 from repro.core.hardware import (TPU_V5E_HBM_BW, TPU_V5E_ICI_BW,
                                  TPU_V5E_PEAK_FLOPS)

@@ -11,9 +11,8 @@ XLA_FLAGS before first jax init and only then calls it.
 
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Sequence
 
-import jax
 import numpy as np
 
 from repro import compat

@@ -17,10 +17,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
-from repro.core import budget as bdg
-from repro.core import modelspec, planner
-from repro.core.hardware import get_hardware
 from repro.launch.train import preset_config
 from repro.models.model import make_model
 from repro.parallel.afd import AFDRuntime, split_nodes

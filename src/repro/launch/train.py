@@ -23,7 +23,6 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs
 from repro.models.model import make_model

@@ -18,7 +18,7 @@ can thread them as carry/ys. All shapes are static; positions are data.
 
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

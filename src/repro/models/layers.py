@@ -7,7 +7,7 @@ init functions returning nested-dict params. Compute happens in
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -21,7 +21,6 @@ Layout conventions (following the reference Mamba-2):
 
 from __future__ import annotations
 
-import math
 from typing import Dict, Optional, Tuple
 
 import jax

@@ -17,14 +17,14 @@ Modes:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import attention as attn
 from repro.models import kvcache, transformer
-from repro.models.common import ArchConfig, shard
+from repro.models.common import ArchConfig
 from repro.models.layers import (apply_lm_head, embed_tokens, init_embedding,
                                  init_lm_head)
 
@@ -169,7 +169,6 @@ class Model:
         """One decode step. tokens: (B,) int32 → (logits (B, V), cache)."""
         cfg = self.cfg
         pos = cache["pos"]
-        b = tokens.shape[0]
         x = embed_tokens(params["embed"], cfg, tokens[:, None],
                          pos[:, None])
         cross_kv = cache.get("cross_kv")

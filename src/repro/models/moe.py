@@ -61,7 +61,6 @@ def route(params, cfg: ArchConfig,
 def aux_load_balance_loss(probs: jax.Array, topi: jax.Array,
                           n_experts: int) -> jax.Array:
     """Switch-style auxiliary load-balance loss: E · Σ_e f_e · P_e."""
-    n = probs.shape[0]
     onehot = jax.nn.one_hot(topi, n_experts, dtype=jnp.float32)  # (N,k,E)
     f = jnp.mean(jnp.sum(onehot, axis=1), axis=0)                 # fraction per e
     p = jnp.mean(probs, axis=0)
@@ -150,16 +149,20 @@ def moe_sorted(params, cfg: ArchConfig, x: jax.Array,
     e, k = cfg.n_experts, cfg.top_k
 
     _, topw, topi = route(params, cfg, x_flat)
-    sort_idx, inv_idx, group_sizes = sort_by_expert(topi, e)
+    sort_idx, _, group_sizes = sort_by_expert(topi, e)
 
+    # Fused router permute: the dispatch gather (token_idx) rides into the
+    # first GEMM as row_index — no (N·k, D) sorted copy is materialized —
+    # and the combine unpermute rides out of the second as an out_index
+    # scatter (out[sort_idx[r]] = row r, the inverse of the inv_idx take).
     token_idx = sort_idx // k                                   # source token
-    xs = jnp.take(x_flat, token_idx, axis=0)                    # (N·k, D)
-    h = kops.grouped_gemm(xs, params["wi"].astype(x_flat.dtype),
-                          group_sizes, impl=impl)
+    h = kops.grouped_gemm(x_flat, params["wi"].astype(x_flat.dtype),
+                          group_sizes, impl=impl, row_index=token_idx)
     h = _expert_ffn(cfg, h)
     ys = kops.grouped_gemm(h, params["wo"].astype(x_flat.dtype),
-                           group_sizes, impl=impl)
-    y = jnp.take(ys, inv_idx, axis=0).reshape(n, k, -1)
+                           group_sizes, impl=impl, out_index=sort_idx,
+                           out_rows=n * k)
+    y = ys.reshape(n, k, -1)
     out = jnp.einsum("nkd,nk->nd", y, topw.astype(x_flat.dtype))
 
     if "shared" in params:

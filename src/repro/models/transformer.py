@@ -15,15 +15,14 @@ Layer structure (pre-norm residual):
 
 from __future__ import annotations
 
-import functools
 from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import attention as attn
-from repro.models import kvcache, mamba2, moe
-from repro.models.common import ArchConfig, LayerSpec, shard
+from repro.models import mamba2, moe
+from repro.models.common import ArchConfig, LayerSpec
 from repro.models.layers import apply_mlp, apply_norm, init_mlp, init_norm
 
 

@@ -30,7 +30,7 @@ split; the planner reports it instead).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -197,7 +197,6 @@ class AFDRuntime:
     def _moe_cycle(self, lp, f_entry, x):
         """Norm → route (A) → dispatch → expert FFN (F) → combine (A)."""
         cfg = self.cfg
-        b = x.shape[0]
         h = apply_norm(lp["ln2"], cfg, x)
         tokens = h.reshape(-1, cfg.d_model)
         _, topw, topi = moe_mod.route(lp["moe"], cfg, tokens)

@@ -30,7 +30,6 @@ Shared experts are NOT handled here — they stay on the dense/TP path
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional, Tuple
 
 import jax

@@ -19,9 +19,8 @@ Dims that don't divide evenly by their mesh axes are left replicated
 from __future__ import annotations
 
 import dataclasses
-import math
 import re
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import numpy as np

@@ -22,7 +22,6 @@ lazily so ``python -m repro provision`` stays jax-free unless
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)

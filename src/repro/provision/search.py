@@ -80,7 +80,8 @@ def default_grid(models=None, hardware=None, scenarios=None,
                  n_a_slack: Sequence[int] = DEFAULT_N_A_SLACK,
                  sigma: float = DEFAULT_SIGMA,
                  ep_lambda: float = pricing.DEFAULT_EP_LAMBDA,
-                 cost_overrides: Dict[str, float] | None = None
+                 cost_overrides: Dict[str, float] | None = None,
+                 weight_bytes: float = 1.0
                  ) -> ProvisionGrid:
     """The stock search space (≈2.2M points); every axis overridable."""
     from repro.core.modelspec import PAPER_MODELS
@@ -97,7 +98,7 @@ def default_grid(models=None, hardware=None, scenarios=None,
         raise ValueError("n_a_slack must be non-empty, all entries ≥ 0")
     spec = resolve_grid(models, hardware, n_f=range(1, n_f_max + 1),
                         scenarios=list(scenarios), bw_scale=list(bw_scale),
-                        b_cap=list(b_cap))
+                        b_cap=list(b_cap), weight_bytes=weight_bytes)
     overrides = tuple(sorted((cost_overrides or {}).items()))
     return ProvisionGrid(spec=spec, n_a_slack=slack, sigma=sigma,
                          ep_lambda=ep_lambda, cost_overrides=overrides)

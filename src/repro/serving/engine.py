@@ -20,13 +20,12 @@ import collections
 import dataclasses
 import math
 import time
-from typing import Callable, Deque, Dict, List, Optional, Tuple
+from typing import Callable, Deque, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.common import ArchConfig
 from repro.models.model import Model
 
 PAD = 0

@@ -20,8 +20,7 @@ propagate through the 3BO pipeline (§2.2).
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import List, Optional, Tuple
+from typing import List, Optional
 
 import numpy as np
 

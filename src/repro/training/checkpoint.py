@@ -19,7 +19,6 @@ asserts bitwise-equal params after a simulated failure.
 
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import re

@@ -14,7 +14,7 @@ they inherit the parameter shardings leaf-for-leaf.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

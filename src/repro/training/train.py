@@ -21,7 +21,7 @@ Distributed-optimization details (DESIGN.md §5):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

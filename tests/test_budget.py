@@ -1,6 +1,5 @@
 """Budget model (Eqs. 1–8) — unit + property tests."""
 
-import math
 
 import pytest
 from optional_hypothesis import given, strategies as st

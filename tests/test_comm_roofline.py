@@ -1,7 +1,6 @@
 """Communication-extended roofline (Eqs. 9–10, Fig. 2) — validation
 targets #1 and #2 from DESIGN.md §7."""
 
-import math
 
 import pytest
 from optional_hypothesis import given, strategies as st

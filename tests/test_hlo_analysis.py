@@ -59,10 +59,6 @@ def test_roofline_terms_and_dominance():
 
 def test_parser_on_real_compiled_module():
     """End-to-end: a sharded matmul's backward must show all-reduce."""
-    from repro import compat
-    mesh = compat.make_mesh((1,), ("model",))
-    from jax.sharding import NamedSharding, PartitionSpec as P
-
     def f(w, x):
         return jnp.sum((x @ w) ** 2)
 

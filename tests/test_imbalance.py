@@ -1,6 +1,5 @@
 """Imbalance penalties (Eqs. 11–16, Figs. 5–6) — validation target #5."""
 
-import math
 
 import pytest
 from optional_hypothesis import given, strategies as st

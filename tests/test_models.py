@@ -1,11 +1,9 @@
 """Model substrate: layers, attention, MoE, Mamba-2, caches."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 import repro.models.attention as attn_mod
 from repro.models import kvcache, layers, mamba2

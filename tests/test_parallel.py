@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro import configs
 from repro.kernels.ref import moe_ffn_ref
@@ -18,7 +18,7 @@ from repro.models.model import make_model
 from repro.parallel import collectives as coll
 from repro.parallel import ep as ep_mod
 from repro.parallel import sharding as shd
-from repro.parallel.afd import AFDRuntime, split_nodes, split_roles
+from repro.parallel.afd import AFDRuntime, split_roles
 
 
 def _mesh1():
@@ -117,7 +117,6 @@ def test_ep_train_differentiable():
 
 
 def test_ep_hook_installs_into_model():
-    cfg = _moe_cfg()
     mesh = _mesh1()
     ep = ep_mod.EPConfig(mesh=mesh, ep_axis="model", dp_axes=("data",))
     assert moe_mod._EP_FORWARD is None

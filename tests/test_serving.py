@@ -7,7 +7,6 @@ import numpy as np
 import pytest
 
 from repro import configs
-from repro.core import budget as bdg
 from repro.core import planner as pln
 from repro.core.hardware import get_hardware
 from repro.core.modelspec import get_model

@@ -2,7 +2,6 @@
 with the documented long_500k skips and stub frontends."""
 
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro import configs

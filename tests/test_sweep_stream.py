@@ -5,7 +5,6 @@ that pins the per-tile footprint on a million-point grid."""
 import json
 
 import numpy as np
-import pytest
 
 from repro.api import (GridSpec, registry, resolve_grid, sweep, sweep_tiles,
                        tile_footprint_bytes, tile_spans, tiles_from_grid)
@@ -93,7 +92,6 @@ def test_tile_spans_partition_exactly():
     assert spec.size == 1_040_000
     spans = tile_spans(spec.shape, tile_points=DEFAULT_TILE_POINTS)
     total = 0
-    seen = np.zeros(spec.shape[:2], dtype=int)  # coarse overlap probe
     for offsets, tshape in spans:
         cells = int(np.prod(tshape))
         assert cells <= DEFAULT_TILE_POINTS
@@ -101,7 +99,6 @@ def test_tile_spans_partition_exactly():
             assert 0 <= o and o + s <= dim
         total += cells
     assert total == spec.size  # exact cover, no overlap, no gap
-    del seen
 
 
 def test_tile_footprint_is_memory_bounded():

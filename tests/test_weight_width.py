@@ -1,0 +1,86 @@
+"""Weight-width threading: kernel-level quantization as an Eq. 6 planning
+lever. Narrower expert weights raise the grouped GEMM's arithmetic
+intensity and shrink HBM residency, which moves the dead-zone N_F
+boundary — checked here end-to-end through the scalar core, the
+vectorized sweep, and the CLI-facing grid resolution."""
+
+import numpy as np
+import pytest
+
+from repro.api.sweep import resolve_grid, scalar_reference, sweep
+from repro.core.hardware import get_hardware
+from repro.core.modelspec import get_model
+from repro.core import budget as bdg
+from repro.core import hfu_bound as hb
+
+
+def test_weight_bytes_per_param_table():
+    assert bdg.weight_bytes_per_param("f32") == 4.0
+    assert bdg.weight_bytes_per_param("bf16") == 2.0
+    assert bdg.weight_bytes_per_param("f16") == 2.0
+    assert bdg.weight_bytes_per_param("fp8") == 1.0
+    assert bdg.weight_bytes_per_param("int8") == 1.0
+    assert bdg.weight_bytes_per_param("int4") == 0.5
+    with pytest.raises(ValueError, match="int2"):
+        bdg.weight_bytes_per_param("int2")
+
+
+def test_narrower_weights_raise_intensity_and_feasibility():
+    model, hw = get_model("DeepSeek-V3"), get_hardware("H800")
+    wide = hb.hfu_point(model, hw, 4, weight_bytes=2.0)
+    narrow = hb.hfu_point(model, hw, 4, weight_bytes=0.5)
+    assert narrow.intensity > wide.intensity
+    assert narrow.feasible >= wide.feasible
+
+
+def test_dead_zone_boundary_shifts_with_int4():
+    """The acceptance pair: int4 vs f16 expert weights move the dead-zone
+    boundary on DeepSeek-V3 x TPUv5e (9 -> 8)."""
+    model, hw = get_model("DeepSeek-V3"), get_hardware("TPUv5e")
+    b_f16 = hb.dead_zone_boundary(model, hw, weight_bytes=2.0)
+    b_int4 = hb.dead_zone_boundary(model, hw, weight_bytes=0.5)
+    assert b_f16 == 9
+    assert b_int4 == 8
+
+
+def test_default_weight_bytes_is_bitwise_noop():
+    """weight_bytes=1.0 (the default) must leave every sweep field
+    byte-identical to a sweep that never mentions it — the golden grids
+    cannot move."""
+    base = sweep("DeepSeek-V3", "H800", n_f=range(1, 9))
+    wb1 = sweep("DeepSeek-V3", "H800", n_f=range(1, 9), weight_bytes=1.0)
+    assert base.weight_bytes == wb1.weight_bytes == 1.0
+    for name in base.fields:
+        a, b = base.fields[name], wb1.fields[name]
+        if a.dtype.kind in "fc":
+            assert np.array_equal(a, b, equal_nan=True), name
+        else:
+            assert np.array_equal(a, b), name
+
+
+def test_sweep_matches_scalar_at_nondefault_width():
+    kw = dict(models=["DeepSeek-V3", "Kimi-K2"], hardware=["TPUv5e", "H800"],
+              n_f=range(1, 12), weight_bytes=0.5)
+    vec, ref = sweep(**kw), scalar_reference(**kw)
+    assert vec.weight_bytes == ref.weight_bytes == 0.5
+    for name in vec.fields:
+        a, b = vec.fields[name], ref.fields[name]
+        if a.dtype.kind in "fc":
+            assert np.array_equal(a, b, equal_nan=True), name
+        else:
+            assert np.array_equal(a, b), name
+
+
+def test_axis_labels_carry_weight_bytes_only_when_nondefault():
+    res = sweep("DeepSeek-V3", "H800", n_f=[4], weight_bytes=0.5)
+    lab = res.axis_labels((0, 0, 0, 0, 0, 0))
+    assert lab["weight_bytes"] == 0.5
+    res1 = sweep("DeepSeek-V3", "H800", n_f=[4])
+    assert "weight_bytes" not in res1.axis_labels((0, 0, 0, 0, 0, 0))
+
+
+def test_resolve_grid_validates_weight_bytes():
+    with pytest.raises(ValueError):
+        resolve_grid("DeepSeek-V3", "H800", n_f=[4], weight_bytes=0.0)
+    with pytest.raises(ValueError):
+        resolve_grid("DeepSeek-V3", "H800", n_f=[4], weight_bytes=-1.0)

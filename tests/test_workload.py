@@ -4,9 +4,7 @@ structure (bursts/ramps via thinning), length-mixture validity."""
 import numpy as np
 import pytest
 
-from repro.serving.workload import (ArrivalEvent, LengthDist, Phase,
-                                    PROFILES, TrafficProfile, generate_trace,
-                                    get_profile, list_profiles)
+from repro.serving.workload import LengthDist, Phase, PROFILES, TrafficProfile, generate_trace, get_profile, list_profiles
 
 
 def test_trace_is_deterministic_per_seed():

@@ -1,0 +1,143 @@
+#!/usr/bin/env python
+"""Perf-ratchet gate for the grouped-GEMM kernel bench.
+
+    PYTHONPATH=src python -m benchmarks.kernel_bench --json current.json
+    python tools/check_bench.py current.json              # gate vs committed
+    python tools/check_bench.py current.json --update     # re-bless trajectory
+
+Sibling of ``check_golden.py`` but with three key classes instead of two:
+
+  * ``*_us`` keys are RATCHETED, not masked: the current wall-clock must be
+    within ``--ratchet`` × the committed value (default 2.5 — generous,
+    because the committed trajectory is interpret-mode CPU timing and CI
+    machines are noisy). Getting faster always passes; a slow regression
+    past the ratchet fails the gate.
+  * ``*_err`` keys are BOUNDED, not byte-compared: numerics noise moves
+    them run-to-run, but each row records its documented ``tol`` and the
+    current error must stay under it (and ``tol`` itself must match the
+    committed value byte-for-byte, so tolerances can't drift silently).
+  * everything else — achieved intensity (analytic, deterministic),
+    ``ok``/``bit_exact`` flags, dead-zone boundaries — must be
+    byte-identical to the committed ``benchmarks/BENCH_kernels.json``.
+
+Exit 1 on any violation.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_GOLDEN = os.path.join(os.path.dirname(__file__), "..",
+                              "benchmarks", "BENCH_kernels.json")
+
+
+def _ratcheted(key: str) -> bool:
+    return key.endswith("_us")
+
+
+def _bounded(key: str) -> bool:
+    return key.endswith("_err")
+
+
+def row_map(doc: dict) -> dict:
+    """``name`` → derived dict (duplicates get a ``#<i>`` suffix)."""
+    out = {}
+    for row in doc.get("rows", []):
+        key, i = row["name"], 1
+        while key in out:
+            key = f"{row['name']}#{i}"
+            i += 1
+        out[key] = dict(row.get("derived", {}))
+    return out
+
+
+def gate(golden: dict, current: dict, ratchet: float) -> list:
+    """All violations as human-readable lines; empty list = clean gate."""
+    gmap, cmap = row_map(golden), row_map(current)
+    problems = []
+    for key in sorted(set(gmap) | set(cmap)):
+        if key not in cmap:
+            problems.append(f"row removed: {key}")
+            continue
+        if key not in gmap:
+            problems.append(f"row added (re-bless with --update): {key}")
+            continue
+        g, c = gmap[key], cmap[key]
+        for k in sorted(set(g) | set(c)):
+            if k not in c:
+                problems.append(f"{key} :: {k}: missing from current")
+                continue
+            if k not in g:
+                problems.append(f"{key} :: {k}: not in committed trajectory")
+                continue
+            gv, cv = g[k], c[k]
+            if _ratcheted(k):
+                limit = gv * ratchet
+                if cv > limit:
+                    problems.append(
+                        f"{key} :: {k}: {cv} exceeds ratchet "
+                        f"{gv} x {ratchet} = {limit:.1f}")
+            elif _bounded(k):
+                tol = g.get("tol")
+                if tol is None:
+                    problems.append(f"{key} :: {k}: no recorded tol to bound")
+                elif cv > tol:
+                    problems.append(
+                        f"{key} :: {k}: {cv} exceeds documented tol {tol}")
+            elif gv != cv:
+                problems.append(
+                    f"{key} :: {k}: current {cv} != committed {gv}")
+    if current.get("failures", 0) != 0:
+        problems.append(f"failures={current['failures']} in current run")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("current",
+                    help="JSON from python -m benchmarks.kernel_bench --json")
+    ap.add_argument("--golden", default=DEFAULT_GOLDEN)
+    ap.add_argument("--ratchet", type=float, default=2.5,
+                    help="allowed wall-clock slowdown factor vs committed")
+    ap.add_argument("--update", action="store_true",
+                    help="overwrite the committed trajectory")
+    args = ap.parse_args(argv)
+
+    with open(args.current) as fh:
+        current = json.load(fh)
+
+    if args.update:
+        with open(args.golden, "w") as fh:
+            json.dump(current, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"trajectory updated: {args.golden} "
+              f"({len(current.get('rows', []))} rows)")
+        return 0
+
+    if not os.path.exists(args.golden):
+        print(f"no committed trajectory at {args.golden}; "
+              "create one with --update", file=sys.stderr)
+        return 1
+
+    with open(args.golden) as fh:
+        golden = json.load(fh)
+
+    problems = gate(golden, current, args.ratchet)
+    if not problems:
+        n = len(current.get("rows", []))
+        print(f"kernel ratchet clean: {n} rows within bounds "
+              f"(ratchet {args.ratchet}x, {os.path.relpath(args.golden)})")
+        return 0
+    print(f"kernel ratchet FAILED — {len(problems)} violation(s):")
+    for line in problems:
+        print(f"  {line}")
+    print("\ninvestigate, then re-bless with tools/check_bench.py --update "
+          "if intended", file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

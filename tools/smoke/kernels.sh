@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Kernels smoke: quantized/fused grouped-GEMM bench + perf-ratchet gate.
+# kernel_bench self-checks every variant against the reference oracle
+# (asserts raise on violation — no pytest needed); check_bench.py then
+# gates wall-clock, error bounds, and deterministic derived values against
+# the committed trajectory in benchmarks/BENCH_kernels.json.
+set -euo pipefail
+export PYTHONPATH=src
+
+python -m benchmarks.kernel_bench --json bench_kernels.json
+python tools/check_bench.py bench_kernels.json
+
+# CLI front door for the weight-width planning lever: int4 expert weights
+# must move the Eq. 6 dead-zone boundary vs f16 on DeepSeek-V3 x TPUv5e
+# (the kernel_bench dead_zone_shift row checks the same thing in-process).
+python -m repro sweep --model DeepSeek-V3 --hardware TPUv5e --weight-dtype f16 >/dev/null
+python -m repro sweep --model DeepSeek-V3 --hardware TPUv5e --weight-dtype int4 >/dev/null
+
+# Autotuner front door on one tiny shape; table goes to a scratch path so
+# the committed src/repro/kernels/autotune_table.json is untouched.
+python -m repro tune --shape 4:8:64:128 --out tune_scratch.json
