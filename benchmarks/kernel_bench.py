@@ -51,6 +51,13 @@ TOL_QUANT = 1e-4              # int8/int4 vs their own dequantized ref
 DEAD_ZONE_MODEL = "DeepSeek-V3"
 DEAD_ZONE_HW = "TPUv5e"
 
+# Runtime prefill bench: one prompt through AFDRuntime.prefill at three
+# chunk sizes. chunk=1 is the token-by-token M2N cadence (one cycle per
+# prompt token per MoE layer); larger chunks amortize the cycle count.
+PREFILL_ARCH = "granite-moe-1b-a400m"
+PREFILL_S = 32
+PREFILL_CHUNKS = (1, 8, 32)
+
 
 def _group_sizes(m: int, g: int, rng) -> np.ndarray:
     cuts = np.sort(rng.integers(0, m + 1, size=g - 1))
@@ -147,8 +154,71 @@ def run(iters: int = 2) -> dict:
                 rows.append({"name": f"{sname}_{dtype}_{tag}",
                              "derived": derived})
 
+    rows.extend(_prefill_rows(iters))
     rows.extend(_dead_zone_rows())
     return {"version": 1, "rows": rows, "failures": 0}
+
+
+def _prefill_rows(iters: int) -> list:
+    """Batched runtime prefill at three chunk sizes on a smoke MoE.
+
+    Deterministic keys: M2N cycles per MoE layer (``ceil(S/chunk)``),
+    measured dispatch/combine bytes vs the Eq. 9/17 window predictor
+    (must match exactly — the model is linear in n, so chunking cannot
+    change the total), and bit-exactness of chunked logits against the
+    chunk=1 token-by-token reference. Only ``wall_us`` rides the ratchet.
+    """
+    import math
+
+    import jax
+    import jax.numpy as jnp
+    from repro import configs
+    from repro.core import planner as pln
+    from repro.models.model import make_model
+    from repro.parallel.afd import AFDRuntime
+
+    cfg = configs.get_smoke_config(PREFILL_ARCH)
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dev = jax.devices()[:1]
+    rt = AFDRuntime(cfg, params, dev, dev)
+    moe_layers = sum(1 for s in rt.specs if s.moe)
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(
+        rng.integers(1, cfg.vocab_size, size=(1, PREFILL_S)), jnp.int32)
+
+    def one_pass(c):
+        caches, pos = rt.init_cache(1, PREFILL_S)
+        logits, _, _ = rt.prefill(tokens, caches, pos, chunk=c)
+        return logits
+
+    rows = []
+    ref = None
+    for c in PREFILL_CHUNKS:
+        d0, c0 = rt.stats.dispatch_bytes, rt.stats.combine_bytes
+        logits = jax.block_until_ready(one_pass(c))
+        meas_d = rt.stats.dispatch_bytes - d0
+        meas_c = rt.stats.combine_bytes - c0
+        pf_d, pf_c = pln.predict_prefill_window_bytes(
+            PREFILL_S, cfg.d_model, cfg.top_k)
+        bytes_ok = (meas_d == moe_layers * pf_d
+                    and meas_c == moe_layers * pf_c)
+        assert bytes_ok, (
+            f"prefill chunk={c}: measured bytes ({meas_d}, {meas_c}) != "
+            f"predicted ({moe_layers * pf_d}, {moe_layers * pf_c})")
+        if ref is None:
+            ref = logits
+        bit = bool(jnp.all(logits == ref))
+        assert bit, f"prefill chunk={c}: logits not bit-exact vs chunk=1"
+        us = _bench(lambda: jax.block_until_ready(one_pass(c)), iters)
+        rows.append({"name": f"prefill_s{PREFILL_S}_chunk{c}",
+                     "derived": {
+                         "wall_us": round(us, 1),
+                         "m2n_cycles_per_layer": math.ceil(PREFILL_S / c),
+                         "bytes_match": bytes_ok,
+                         "bit_exact_vs_token": bit,
+                     }})
+    return rows
 
 
 def _boundary_from_sweep(res) -> Optional[int]:

@@ -403,7 +403,8 @@ def cmd_serve_traffic(args) -> int:
         rt, max_len=args.max_len, n_bo=args.n_bo, mb_slots=args.mb_slots,
         scheduler=scheduler, probe=probe, greedy=not args.sample,
         seed=args.seed, slo_tpot=args.slo_tpot, slo_ttft=args.slo_ttft,
-        tick_seconds=tick_s, window_ticks=args.window_ticks)
+        tick_seconds=tick_s, window_ticks=args.window_ticks,
+        prefill_chunk=args.prefill_chunk or None)
     trace = generate_trace(profile, seed=args.seed,
                            max_requests=args.max_requests)
 
@@ -557,7 +558,8 @@ def cmd_serve_fleet(args) -> int:
             rt, max_len=args.max_len, n_bo=bo, mb_slots=slots,
             probe=probe, seed=args.seed, slo_tpot=args.slo_tpot,
             slo_ttft=args.slo_ttft, tick_seconds=tick_s,
-            window_ticks=args.window_ticks)
+            window_ticks=args.window_ticks,
+            prefill_chunk=args.prefill_chunk or None)
         if args.kv_budget_slots is not None:
             # bytes-based admission cap as a fraction of the preallocated
             # full-length cache (1.0 = the flat slot cap, <1 tightens)
@@ -784,6 +786,10 @@ def build_parser() -> argparse.ArgumentParser:
                     help="§3.3 SLO scheduler mode throttling admission")
     st.add_argument("--slo-tpot", type=float, default=0.05)
     st.add_argument("--slo-ttft", type=float, default=1.0)
+    st.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: tokens per prompt chunk, one "
+                         "chunk interleaved per decode tick (0 = legacy "
+                         "token-by-token teacher forcing)")
     st.add_argument("--sample", action="store_true",
                     help="sample instead of greedy decode (seeded)")
     st.add_argument("--json", default=None, metavar="PATH",
@@ -825,6 +831,8 @@ def build_parser() -> argparse.ArgumentParser:
     sf.add_argument("--tick-ms", type=float, default=10.0)
     sf.add_argument("--slo-tpot", type=float, default=0.05)
     sf.add_argument("--slo-ttft", type=float, default=1.0)
+    sf.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill on every replica (0 = legacy)")
     sf.add_argument("--json", default=None, metavar="PATH",
                     help="write windows+summary JSON ('-' for stdout)")
     sf.set_defaults(fn=cmd_serve_fleet, rescale=True)

@@ -72,7 +72,9 @@ class FleetReplica:
             queued_kv_bytes=eng.queued_kv_bytes(),
             queued_prompt_tokens=eng.queued_prompt_tokens(),
             queued_pending_tokens=eng.queued_pending_tokens(),
-            tick_seconds=eng.tick_seconds)
+            tick_seconds=eng.tick_seconds,
+            prefill_chunk=eng.prefill_chunk,
+            prefill_backlog_tokens=eng.prefill_backlog_tokens())
 
 
 @dataclasses.dataclass

@@ -18,7 +18,8 @@ Policies (``python -m repro list routers``):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Type
+import math
+from typing import Dict, List, Optional, Sequence, Type
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,6 +36,8 @@ class ReplicaView:
     queued_prompt_tokens: int
     queued_pending_tokens: int
     tick_seconds: float
+    prefill_chunk: Optional[int] = None   # chunked-prefill size (None=legacy)
+    prefill_backlog_tokens: int = 0       # admitted prompts still prefilling
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,12 +92,21 @@ class PredictedTTFTRouter(RouterPolicy):
     """Smallest predicted TTFT under the engines' virtual-clock cost
     model: prefill is one tick per prompt token (queued prompts serialize
     ahead of this one), and a backlog beyond the slot count waits for a
-    full generation to drain per excess request."""
+    full generation to drain per excess request. A chunked-prefill
+    replica (``prefill_chunk`` set) charges ``ceil(tokens / chunk)``
+    ticks instead — prompt work admitted but not yet prefilled
+    (``prefill_backlog_tokens``) serializes ahead too, since each tick
+    runs one chunk from the FIFO."""
 
     name = "predicted-ttft"
 
     def predict(self, req: RouteRequest, v: ReplicaView) -> float:
-        prefill_ticks = v.queued_prompt_tokens + req.prompt_len
+        if v.prefill_chunk:
+            pending = (v.queued_prompt_tokens + v.prefill_backlog_tokens
+                       + req.prompt_len)
+            prefill_ticks = math.ceil(pending / v.prefill_chunk)
+        else:
+            prefill_ticks = v.queued_prompt_tokens + req.prompt_len
         excess = max(0, v.live + v.queue_len + 1 - v.total_slots)
         wait_ticks = excess * max(req.max_new_tokens, 1)
         return v.tick_seconds * (prefill_ticks + wait_ticks)

@@ -39,7 +39,7 @@ _MASK = -1e30
 def _kernel(q_ref, k_ref, v_ref, out_ref,
             m_ref, l_ref, acc_ref,
             *, tile_q: int, tile_k: int, t_valid: int, scale: float,
-            causal: bool, window: Optional[int], out_dtype):
+            causal: bool, window: Optional[int], q_offset: int, out_dtype):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
     n_k = pl.num_programs(3)
@@ -55,8 +55,11 @@ def _kernel(q_ref, k_ref, v_ref, out_ref,
     v = v_ref[0, 0].astype(jnp.float32)
 
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
-    rows = qi * tile_q + jax.lax.broadcasted_iota(jnp.int32,
-                                                  (tile_q, tile_k), 0)
+    # q_offset shifts the query rows to their absolute positions — the
+    # chunked-prefill case where q starts mid-sequence against a cache
+    # already holding the prior context.
+    rows = q_offset + qi * tile_q + jax.lax.broadcasted_iota(
+        jnp.int32, (tile_q, tile_k), 0)
     cols = ki * tile_k + jax.lax.broadcasted_iota(jnp.int32,
                                                   (tile_q, tile_k), 1)
     mask = cols < t_valid
@@ -84,9 +87,16 @@ def _kernel(q_ref, k_ref, v_ref, out_ref,
 def flash_prefill_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                          causal: bool = True,
                          window: Optional[int] = None,
+                         q_offset: int = 0,
+                         t_valid: Optional[int] = None,
                          tile_q: int = 128, tile_k: int = 256,
                          interpret: bool = True) -> jax.Array:
-    """q: (B, S, Hq, d); k, v: (B, T, Hkv, d) → (B, S, Hq, d)."""
+    """q: (B, S, Hq, d); k, v: (B, T, Hkv, d) → (B, S, Hq, d).
+
+    ``q_offset`` places query row j at absolute position ``q_offset + j``
+    (chunked prefill against a live cache); ``t_valid`` bounds how many
+    leading KV slots hold real keys (default: all T).
+    """
     b, s, hq, d = q.shape
     t, hkv = k.shape[1], k.shape[2]
     group = hq // hkv
@@ -107,9 +117,10 @@ def flash_prefill_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
         vh = jnp.pad(vh, ((0, 0), (0, 0), (0, t_pad - t), (0, 0)))
 
     kernel = functools.partial(
-        _kernel, tile_q=tile_q, tile_k=tile_k, t_valid=t,
+        _kernel, tile_q=tile_q, tile_k=tile_k,
+        t_valid=(t if t_valid is None else min(t_valid, t)),
         scale=1.0 / math.sqrt(d), causal=causal, window=window,
-        out_dtype=q.dtype)
+        q_offset=q_offset, out_dtype=q.dtype)
 
     out = pl.pallas_call(
         kernel,

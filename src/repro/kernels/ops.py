@@ -136,14 +136,22 @@ def flash_prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                             causal: bool = True,
                             window: Optional[int] = None,
                             impl: Optional[str] = None,
+                            q_offset: int = 0,
+                            t_valid: Optional[int] = None,
                             tile_q: int = 128,
                             tile_k: int = 256) -> jax.Array:
-    """Tiled online-softmax prefill attention (B, S, Hq, d)."""
+    """Tiled online-softmax prefill attention (B, S, Hq, d).
+
+    ``q_offset``/``t_valid`` support chunked prefill against a live cache:
+    query row j sits at absolute position ``q_offset + j`` and only the
+    first ``t_valid`` KV slots hold real keys.
+    """
     from repro.kernels.flash_prefill import flash_prefill_pallas
     impl = impl or default_impl()
     if impl == "pallas":
         interpret = jax.devices()[0].platform != "tpu"
         return flash_prefill_pallas(q, k, v, causal=causal, window=window,
+                                    q_offset=q_offset, t_valid=t_valid,
                                     tile_q=tile_q, tile_k=tile_k,
                                     interpret=interpret)
     # XLA / ref: dense masked attention (the models/attention.py chunked
@@ -154,9 +162,11 @@ def flash_prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     qg = q.reshape(b, s, hkv, group, d).astype(jnp.float32)
     scores = jnp.einsum("bskgd,btkd->bkgst", qg, k.astype(jnp.float32))
     scores = scores / jnp.sqrt(jnp.asarray(d, jnp.float32))
-    rows = jnp.arange(s)[:, None]
+    rows = q_offset + jnp.arange(s)[:, None]
     cols = jnp.arange(t)[None, :]
     mask = jnp.ones((s, t), bool)
+    if t_valid is not None:
+        mask = mask & (cols < t_valid)
     if causal:
         mask = mask & (cols <= rows)
     if window is not None:

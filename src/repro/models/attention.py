@@ -191,6 +191,54 @@ def attention_prefill(params, cfg: ArchConfig, x: jax.Array,
     return _output_proj(params, out), new_cache
 
 
+def attention_prefill_cached(params, cfg: ArchConfig, x: jax.Array,
+                             cache: Dict[str, jax.Array], pos: jax.Array,
+                             impl: Optional[str] = None
+                             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Multi-token chunk step against a live cache. x: (B, C, D); pos: (B,)
+    absolute position of x[:, 0]. The batched form of C ``attention_decode``
+    calls: all C keys/values are written first, then every chunk row attends
+    over the full cache under its own per-position validity mask
+    (``kvcache.valid_mask_chunk``), so row j's arithmetic — scores, masked
+    softmax, value contraction — is bit-identical to a decode step at
+    pos + j. Future chunk rows mask to exactly-zero probabilities, which
+    annihilate their (already written) values.
+
+    ``impl="pallas"`` routes the chunk through the flash-prefill kernel
+    (``q_offset`` places the chunk mid-sequence) — the TPU path; online
+    softmax is not bit-exact vs the dense reference, so the default (None →
+    dense masked) is what the serving engine's bit-exactness tests pin.
+    """
+    b, c, _ = x.shape
+    q = _project_q(params, cfg, x)
+    k_new, v_new = _project_kv(params, cfg, x)
+    positions = pos[:, None] + jnp.arange(c, dtype=pos.dtype)[None, :]
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k_new = apply_rope(k_new, positions, cfg.rope_theta)
+    new_cache = kvcache.write_kv_chunk(cfg, cache, k_new, v_new, pos)
+    t = new_cache["k"].shape[1]
+    if (impl == "pallas" and cfg.sliding_window is None
+            and bool(jnp.all(pos == pos[0]))):
+        # kernel q_offset is scalar — needs a uniform chunk start (the
+        # engine prefills one sequence at a time, so this always holds
+        # there); ragged batches fall back to the dense masked path.
+        from repro.kernels import ops as kops
+        off = int(pos[0])
+        out = kops.flash_prefill_attention(
+            q, new_cache["k"], new_cache["v"], causal=cfg.causal,
+            window=cfg.sliding_window, impl="pallas",
+            q_offset=off, t_valid=min(off + c, t))
+        out = out.reshape(b, c, -1)
+        out = shard(out, "batch", "seq", "heads")
+    else:
+        valid = kvcache.valid_mask_chunk(cfg, t, pos, c)      # (B, C, T)
+        mask = valid[:, None, None, :, :]                     # (B,1,1,C,T)
+        out = gqa_scores_softmax_out(cfg, q, new_cache["k"],
+                                     new_cache["v"], mask)
+    return _output_proj(params, out), new_cache
+
+
 # Optional distributed decode-attention strategy (split-KV shard_map with
 # LSE combine) — installed by parallel.collectives for the §Perf iteration.
 # fn(cfg, q (B,1,Hq,d), k, v, pos) -> (B, 1, Hq·d) or None (= not applicable).

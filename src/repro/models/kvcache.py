@@ -110,6 +110,34 @@ def write_kv(cfg: ArchConfig, cache: Dict[str, jax.Array],
     return {"k": k, "v": v}
 
 
+def write_kv_chunk(cfg: ArchConfig, cache: Dict[str, jax.Array],
+                   k_new: jax.Array, v_new: jax.Array,
+                   pos: jax.Array) -> Dict[str, jax.Array]:
+    """Scatter a chunk's k/v (B, C, n_kv, d_head) at per-sequence offsets.
+
+    Row j of the chunk lands at absolute position ``pos + j`` — the batched
+    form of ``write_kv`` applied C times, and bit-identical to that loop:
+    the scatter indices are disjoint except under ring wrap, where
+    ``.at[].set`` keeps the *last* write per slot, exactly like sequential
+    single-position writes (position p always lives in slot p mod window).
+    """
+    t = cache["k"].shape[1]
+    b, c = k_new.shape[0], k_new.shape[1]
+    if cfg.sliding_window is not None and c > t:
+        # Ring wrap: only the last ``t`` positions survive a sequential
+        # write loop; drop the overwritten head so every slot is scattered
+        # exactly once (duplicate scatter indices are undefined in XLA).
+        k_new, v_new = k_new[:, c - t:], v_new[:, c - t:]
+        pos = pos + (c - t)
+        c = t
+    positions = pos[:, None] + jnp.arange(c, dtype=pos.dtype)[None, :]
+    slot = positions % t if cfg.sliding_window is not None else positions
+    bidx = jnp.arange(b)[:, None]
+    k = cache["k"].at[bidx, slot].set(k_new.astype(cache["k"].dtype))
+    v = cache["v"].at[bidx, slot].set(v_new.astype(cache["v"].dtype))
+    return {"k": k, "v": v}
+
+
 def write_kv_prefill(cfg: ArchConfig, cache: Dict[str, jax.Array],
                      k: jax.Array, v: jax.Array) -> Dict[str, jax.Array]:
     """Bulk-write a prefill segment starting at position 0.
@@ -148,4 +176,23 @@ def valid_mask(cfg: ArchConfig, cache_len: int, pos: jax.Array) -> jax.Array:
     t = cache_len
     cur_slot = p % t
     age = (cur_slot - slots) % t                              # 0 = current pos
+    return (age <= p) & (age < t)
+
+
+def valid_mask_chunk(cfg: ArchConfig, cache_len: int, pos: jax.Array,
+                     chunk: int) -> jax.Array:
+    """(B, C, T) bool — ``valid_mask`` evaluated at ``pos + j`` per chunk row.
+
+    Row j sees exactly what a decode step at position pos+j would see, so
+    attention over the full cache under this mask is causally correct for
+    the whole chunk (later chunk rows occupy slots > pos+j and mask out)
+    and bit-identical to C sequential decode masks.
+    """
+    slots = jnp.arange(cache_len)[None, None, :]             # (1, 1, T)
+    p = (pos[:, None] + jnp.arange(chunk, dtype=pos.dtype)[None, :])[..., None]
+    if cfg.sliding_window is None:
+        return slots <= p
+    t = cache_len
+    cur_slot = p % t
+    age = (cur_slot - slots) % t
     return (age <= p) & (age < t)

@@ -157,19 +157,28 @@ class AFDRuntime:
     # ---- F-role program ----------------------------------------------------
 
     def _ffn_impl(self, wi, wo, tokens, topw, topi):
-        """Routed-expert FFN given gating (router ran on the A role)."""
+        """Routed-expert FFN given gating (router ran on the A role).
+
+        Uses the fused router permute (PR 5): the dispatch gather rides
+        into the first grouped GEMM as ``row_index`` (no (N·k, D) sorted
+        copy materialises — at prefill chunk sizes that copy is
+        chunk·top_k·d_model) and the combine unpermute rides out of the
+        second as an ``out_index`` scatter. Bit-exact vs the unfused
+        gather→GEMM→take composition on every impl.
+        """
         cfg = self.cfg
         n, d = tokens.shape
-        sort_idx, inv_idx, group_sizes = moe_mod.sort_by_expert(
+        sort_idx, _, group_sizes = moe_mod.sort_by_expert(
             topi, cfg.n_experts)
-        xs = jnp.take(tokens, sort_idx // cfg.top_k, axis=0)
-        h = kops.grouped_gemm(xs, wi.astype(tokens.dtype), group_sizes,
-                              impl=self.gemm_impl)
+        h = kops.grouped_gemm(tokens, wi.astype(tokens.dtype), group_sizes,
+                              impl=self.gemm_impl,
+                              row_index=sort_idx // cfg.top_k)
         gate, up = jnp.split(h, 2, axis=-1)
         h = jax.nn.silu(gate) * up
         ys = kops.grouped_gemm(h, wo.astype(tokens.dtype), group_sizes,
-                               impl=self.gemm_impl)
-        y = jnp.take(ys, inv_idx, axis=0).reshape(n, cfg.top_k, d)
+                               impl=self.gemm_impl, out_index=sort_idx,
+                               out_rows=n * cfg.top_k)
+        y = ys.reshape(n, cfg.top_k, d)
         return jnp.einsum("nkd,nk->nd", y, topw.astype(tokens.dtype))
 
     # ---- per-layer A-role pieces -------------------------------------------
@@ -282,6 +291,78 @@ class AFDRuntime:
                                    self.a_params["embed"], cfg, x)
             outs.append((logits[:, 0], st["new"], st["pos"] + 1))
         return outs
+
+    # ---- public prefill --------------------------------------------------------
+
+    def _mixer_chunk(self, lp, spec: LayerSpec, x, cache, pos,
+                     attn_impl: Optional[str]):
+        cfg = self.cfg
+        h = apply_norm(lp["ln1"], cfg, x)
+        if spec.kind == "attn":
+            mix, nc = attn_mod.attention_prefill_cached(
+                lp["attn"], cfg, h, cache, pos, impl=attn_impl)
+            return x + mix, nc
+        # SSM mixers are an O(1)-per-token recurrence with no cached-state
+        # batched form here — step the chunk sequentially (bit-identical to
+        # decode by construction; the M2N win lives in the MoE dispatch).
+        outs = []
+        for j in range(x.shape[1]):
+            mj, cache = mamba2.mamba_decode(lp["mamba"], cfg, h[:, j:j + 1],
+                                            cache)
+            outs.append(mj)
+        return x + jnp.concatenate(outs, axis=1), cache
+
+    def _prefill_block(self, tokens, caches, pos, attn_impl):
+        """One chunk (B, C) through the full layer stack — C tokens per
+        M2N cycle instead of 1."""
+        cfg = self.cfg
+        c = tokens.shape[1]
+        x = embed_tokens(self.a_params["embed"], cfg, tokens,
+                         pos[:, None] + jnp.arange(c, dtype=pos.dtype))
+        new_caches = []
+        for i, spec in enumerate(self.specs):
+            lp = self.a_params["layers"][i]
+            x, nc = self._mixer_chunk(lp, spec, x, caches[i], pos, attn_impl)
+            if spec.moe:
+                x = self._moe_cycle(lp, self.f_layers[i], x)
+            else:
+                x = self._ffn_local(lp, spec, x)
+            new_caches.append(nc)
+        x = apply_norm(self.a_params["final_norm"], cfg, x)
+        logits = apply_lm_head(self.a_params["lm_head"],
+                               self.a_params["embed"], cfg, x)
+        return logits, new_caches, pos + c
+
+    def prefill(self, tokens: jax.Array, caches, pos: jax.Array,
+                chunk: Optional[int] = None,
+                attn_impl: Optional[str] = None):
+        """Native batched prefill: S tokens per sequence in ceil(S/chunk)
+        M2N cycles per MoE layer, vs S cycles for token-by-token teacher
+        forcing. tokens: (B, S) int32; pos: (B,) start positions.
+
+        Each chunk pushes B·C tokens through ``_moe_cycle`` in one
+        dispatch→grouped-GEMM→combine (per-cycle payload B·C·d_model,
+        Eq. 17's high-intensity regime) with the fused ``row_index``/
+        ``out_index`` permute; attention runs ``attention_prefill_cached``
+        (the flash-prefill kernel when ``attn_impl="pallas"``/on TPU, dense
+        masked otherwise). Logits are bit-exact vs teacher forcing through
+        ``decode_step`` on the dense path — every per-token arithmetic step
+        is the same program evaluated batched.
+
+        Returns (logits (B, S, V) f32, caches, pos + S).
+        """
+        if attn_impl is None and kops.default_impl() == "pallas":
+            attn_impl = "pallas"
+        s = tokens.shape[1]
+        c = s if chunk is None else max(1, int(chunk))
+        parts = []
+        for off in range(0, s, c):
+            lg, caches, pos = self._prefill_block(
+                tokens[:, off:off + c], caches, pos, attn_impl)
+            parts.append(lg)
+        logits = parts[0] if len(parts) == 1 else jnp.concatenate(parts,
+                                                                  axis=1)
+        return logits, caches, pos
 
 
 def split_nodes(devices: Sequence, n_a_nodes: int, n_f_nodes: int,

@@ -52,7 +52,7 @@ from repro.core.modelspec import MoEModelSpec
 from repro.models.kvcache import attn_cache_len
 from repro.parallel.afd import AFDRuntime
 from repro.serving.engine import PAD, failure_drain_count, splice_batch_slot
-from repro.serving.scheduler import SLOScheduler
+from repro.serving.scheduler import ChunkedPrefillPolicy, SLOScheduler
 from repro.serving.workload import ArrivalEvent
 
 
@@ -84,13 +84,31 @@ class ServeRequest:
 
 
 @dataclasses.dataclass
+class _PrefillProgress:
+    """A slot mid-chunked-prefill: its private 1-sequence cache fills
+    ``chunk`` tokens per tick until the prompt is exhausted."""
+    req: ServeRequest
+    caches: list                        # 1-sequence per-layer caches
+    pos: object                         # (1,) int32
+    offset: int = 0                     # prompt tokens prefilled so far
+
+
+@dataclasses.dataclass
 class _MicroBatch:
     caches: list                        # per-layer AFD caches
     pos: object                         # (mb_slots,) int32
     tokens: np.ndarray                  # (mb_slots,) int32 next feed
     slots: List[Optional[ServeRequest]]
+    # chunked-prefill scheduler state: slot → progress. A prefilling slot
+    # is *occupied* (admission / KV accounting) but not decode-live.
+    prefill: Dict[int, _PrefillProgress] = dataclasses.field(
+        default_factory=dict)
 
     def live(self) -> List[int]:
+        return [i for i, r in enumerate(self.slots)
+                if r is not None and i not in self.prefill]
+
+    def occupied(self) -> List[int]:
         return [i for i, r in enumerate(self.slots) if r is not None]
 
 
@@ -136,6 +154,9 @@ class WindowRecord:
     # KV-cache occupancy (bytes-based admission, fleet routing signal)
     kv_occupancy_bytes: int = 0
     kv_budget_bytes: int = 0
+    # chunked-prefill accounting (per window)
+    prefill_tokens: int = 0
+    prefill_chunks: int = 0             # M2N prefill cycles per MoE layer
     # §3.3 policy loop
     sigma: Optional[float] = None
     straggler_rate: Optional[float] = None
@@ -153,8 +174,10 @@ class WindowRecord:
 @dataclasses.dataclass
 class ServeStats:
     decode_ticks: int = 0
+    engine_ticks: int = 0               # decode ticks + prefill-only ticks
     prefills: int = 0
     prefill_tokens: int = 0
+    prefill_chunks: int = 0             # M2N prefill cycles per MoE layer
     tokens_out: int = 0
     arrivals: int = 0
     completed: int = 0
@@ -174,9 +197,17 @@ class AFDServeEngine:
                  tick_seconds: Optional[float] = 0.05,
                  tick_latencies: Optional[Sequence[float]] = None,
                  window_ticks: int = 8,
-                 kv_budget_bytes: Optional[int] = None):
+                 kv_budget_bytes: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 prefill_policy: Optional[ChunkedPrefillPolicy] = None):
         if n_bo < 1 or mb_slots < 1:
             raise ValueError("need n_bo ≥ 1 and mb_slots ≥ 1")
+        if prefill_chunk is not None and prefill_policy is not None:
+            raise ValueError("pass prefill_chunk or prefill_policy, not both")
+        if prefill_chunk is not None:
+            prefill_policy = ChunkedPrefillPolicy(prefill_chunk)
+        # None → legacy token-by-token teacher forcing at admission.
+        self.prefill_policy = prefill_policy
         self.rt = runtime
         self.cfg = runtime.cfg
         self.max_len = max_len
@@ -195,6 +226,8 @@ class AFDServeEngine:
         self.window_ticks = window_ticks
 
         self.mbs = [self._fresh_mb() for _ in range(n_bo)]
+        # FIFO of (mb index, slot) still prefilling — chunk service order.
+        self._prefill_fifo: Deque[tuple] = collections.deque()
         self.queue: Deque[ServeRequest] = collections.deque()
         self.trace: Deque[ArrivalEvent] = collections.deque()
         self.now = 0.0
@@ -245,10 +278,26 @@ class AFDServeEngine:
         return int(self.rng.choice(p.shape[0], p=p))
 
     def live_count(self) -> int:
+        """Occupied slots: decoding *and* still-prefilling requests."""
+        return sum(len(mb.occupied()) for mb in self.mbs)
+
+    def decode_live_count(self) -> int:
+        """Slots actually fed by the decode rotation this tick."""
         return sum(len(mb.live()) for mb in self.mbs)
 
     def live_requests(self) -> List[ServeRequest]:
         return [r for mb in self.mbs for r in mb.slots if r is not None]
+
+    def prefill_backlog_tokens(self) -> int:
+        """Prompt tokens admitted but not yet prefilled (chunk backlog) —
+        the fleet's predicted-TTFT router prices this ahead of new work."""
+        return sum(len(pf.req.prompt) - pf.offset
+                   for mb in self.mbs for pf in mb.prefill.values())
+
+    @property
+    def prefill_chunk(self) -> Optional[int]:
+        return (self.prefill_policy.chunk if self.prefill_policy is not None
+                else None)
 
     # ---- KV-cache occupancy accounting -------------------------------------
 
@@ -286,13 +335,15 @@ class AFDServeEngine:
         cyc_d, cyc_c = pln.predict_m2n_cycle_bytes(
             self.mb_slots, self.cfg.d_model, self.cfg.top_k,
             dtype_bytes=self._dtype_bytes)
-        pf_d, pf_c = pln.predict_m2n_cycle_bytes(
-            1, self.cfg.d_model, self.cfg.top_k,
+        # Eq. 17 is linear in the cycle's token count, so the prefill term
+        # is exact for any chunking — 1-token teacher forcing and chunked
+        # batched prefill price identically (predict_prefill_window_bytes).
+        pf_d, pf_c = pln.predict_prefill_window_bytes(
+            self.stats.prefill_tokens, self.cfg.d_model, self.cfg.top_k,
             dtype_bytes=self._dtype_bytes)
         decode_cycles = self.stats.decode_ticks * self.n_bo * self._moe_layers
-        prefill_cycles = self.stats.prefill_tokens * self._moe_layers
-        return (decode_cycles * cyc_d + prefill_cycles * pf_d,
-                decode_cycles * cyc_c + prefill_cycles * pf_c)
+        return (decode_cycles * cyc_d + self._moe_layers * pf_d,
+                decode_cycles * cyc_c + self._moe_layers * pf_c)
 
     def _tick_duration(self, wall0: float) -> float:
         if self._latencies is not None:
@@ -308,11 +359,13 @@ class AFDServeEngine:
     def _open_window(self) -> None:
         self._w_t0 = self.now
         self._w_ticks = 0
+        self._w_decode_ticks = 0
         self._w_arrivals = 0
         self._w_admitted = 0
         self._w_completed: List[ServeRequest] = []
         self._w_tokens_out = 0
         self._w_prefill_tokens = 0
+        self._w_prefill_chunks = 0
         self._w_bytes0 = self.rt.stats.snapshot()
 
     def _close_window(self) -> None:
@@ -320,13 +373,14 @@ class AFDServeEngine:
         cyc_d, cyc_c = pln.predict_m2n_cycle_bytes(
             self.mb_slots, self.cfg.d_model, self.cfg.top_k,
             dtype_bytes=self._dtype_bytes)
-        pf_d, pf_c = pln.predict_m2n_cycle_bytes(
-            1, self.cfg.d_model, self.cfg.top_k,
+        # Chunk-exact prefill pricing: linear in the window's prefill
+        # tokens, independent of how they were chunked into cycles.
+        pf_d, pf_c = pln.predict_prefill_window_bytes(
+            self._w_prefill_tokens, self.cfg.d_model, self.cfg.top_k,
             dtype_bytes=self._dtype_bytes)
-        decode_cycles = self._w_ticks * self.n_bo * self._moe_layers
-        prefill_cycles = self._w_prefill_tokens * self._moe_layers
-        pred_dispatch = decode_cycles * cyc_d + prefill_cycles * pf_d
-        pred_combine = decode_cycles * cyc_c + prefill_cycles * pf_c
+        decode_cycles = self._w_decode_ticks * self.n_bo * self._moe_layers
+        pred_dispatch = decode_cycles * cyc_d + self._moe_layers * pf_d
+        pred_combine = decode_cycles * cyc_c + self._moe_layers * pf_c
 
         dur = max(self.now - self._w_t0, 1e-12)
         done = self._w_completed
@@ -357,6 +411,8 @@ class AFDServeEngine:
                            if self._moe_layers else 0),
             kv_occupancy_bytes=self.kv_occupancy_bytes(),
             kv_budget_bytes=self.kv_budget_bytes,
+            prefill_tokens=self._w_prefill_tokens,
+            prefill_chunks=self._w_prefill_chunks,
         )
         if self.scheduler is not None:
             d = self.scheduler.decide(self._policy_budget())
@@ -413,12 +469,14 @@ class AFDServeEngine:
     def _prefill_single(self, req: ServeRequest):
         """Teacher-force the prompt through the two-role decode path.
 
-        The AFD runtime has no batched prefill program; the prompt streams
-        token-by-token through the same M2N cycle, so prefill traffic lands
-        in the byte accounting like any other dispatch — and costs one tick
-        of virtual time per prompt token, which is literally what this
-        implementation spends. Returns the populated 1-sequence caches,
-        final pos, and the first output token.
+        The legacy (``prefill_chunk=None``) admission path: the prompt
+        streams token-by-token through the same M2N cycle, so prefill
+        traffic lands in the byte accounting like any other dispatch —
+        and costs one tick of virtual time per prompt token, which is
+        literally what this implementation spends. The chunked scheduler
+        (``_prefill_tick``) replaces this with ``AFDRuntime.prefill``
+        chunks interleaved with decode. Returns the populated 1-sequence
+        caches, final pos, and the first output token.
         """
         wall0 = time.perf_counter()
         caches, pos = self.rt.init_cache(1, self.max_len)
@@ -428,6 +486,9 @@ class AFDServeEngine:
                 jnp.asarray([tok], jnp.int32), caches, pos)
         self._w_prefill_tokens += len(req.prompt)
         self.stats.prefill_tokens += len(req.prompt)
+        # token-by-token: every prompt token is its own 1-token M2N cycle
+        self._w_prefill_chunks += len(req.prompt)
+        self.stats.prefill_chunks += len(req.prompt)
         if self._latencies is not None or self.tick_seconds is not None:
             base = (self.tick_seconds if self.tick_seconds is not None
                     else self._latencies[0])
@@ -438,7 +499,7 @@ class AFDServeEngine:
         return caches, pos, first
 
     def _admit(self) -> None:
-        for mb in self.mbs:
+        for mb_i, mb in enumerate(self.mbs):
             for slot in range(self.mb_slots):
                 if not self.queue or self.live_count() >= self._live_cap:
                     return
@@ -454,6 +515,18 @@ class AFDServeEngine:
                 if occupancy and occupancy + need > self.kv_budget_bytes:
                     return
                 req = self.queue.popleft()
+                if self.prefill_policy is not None:
+                    # Chunked mode: occupy the slot now, stream the prompt
+                    # through ``AFDRuntime.prefill`` one chunk per tick
+                    # (interleaved with decode by ``tick``).
+                    caches1, pos1 = self.rt.init_cache(1, self.max_len)
+                    mb.slots[slot] = req
+                    mb.tokens[slot] = PAD
+                    mb.prefill[slot] = _PrefillProgress(
+                        req=req, caches=caches1, pos=pos1)
+                    self._prefill_fifo.append((mb_i, slot))
+                    self._w_admitted += 1
+                    continue
                 caches1, _, first = self._prefill_single(req)
                 for li in range(len(mb.caches)):
                     mb.caches[li] = splice_batch_slot(
@@ -470,6 +543,77 @@ class AFDServeEngine:
                     req.t_first = self.now   # re-admissions keep the
                 # original timestamp so TTFT/TPOT span outages (fleet
                 # requeue-after-failure accounting stays honest)
+                if req.done:
+                    # The first token already satisfied max_new_tokens —
+                    # complete in the same tick the logits landed instead
+                    # of decoding a surplus token and stamping t_done a
+                    # tick late (the TTFT/completion accounting fix).
+                    self._complete(mb, slot)
+
+    def _complete(self, mb: _MicroBatch, slot: int) -> None:
+        req = mb.slots[slot]
+        req.t_done = self.now
+        self.completed.append(req)
+        self._w_completed.append(req)
+        self.stats.completed += 1
+        mb.slots[slot] = None
+        mb.tokens[slot] = PAD
+        mb.pos = mb.pos.at[slot].set(0)
+
+    # ---- chunked prefill (one chunk per tick, FIFO over prefilling slots) ---
+
+    def _prefill_tick(self) -> tuple:
+        """Run up to ``max_chunks_per_tick`` prompt chunks through the
+        native batched prefill. Returns (chunks_run, finished) where
+        ``finished`` lists (mb_i, slot, logits) whose prompts completed —
+        their bookkeeping lands after the clock advances, in this tick."""
+        finished = []
+        ran = 0
+        while (self._prefill_fifo
+               and ran < self.prefill_policy.max_chunks_per_tick):
+            mb_i, slot = self._prefill_fifo[0]
+            pf = self.mbs[mb_i].prefill[slot]
+            c = self.prefill_policy.next_chunk(len(pf.req.prompt) - pf.offset)
+            blk = jnp.asarray(
+                pf.req.prompt[None, pf.offset:pf.offset + c], jnp.int32)
+            logits, pf.caches, pf.pos = self.rt.prefill(blk, pf.caches,
+                                                        pf.pos)
+            pf.offset += c
+            ran += 1
+            self.stats.prefill_tokens += c
+            self._w_prefill_tokens += c
+            self.stats.prefill_chunks += 1
+            self._w_prefill_chunks += 1
+            if pf.offset >= len(pf.req.prompt):
+                self._prefill_fifo.popleft()
+                finished.append((mb_i, slot, logits))
+        return ran, finished
+
+    def _finish_prefill(self, mb_i: int, slot: int, logits) -> None:
+        """Splice the prefilled cache into the batch slot (token-slab write
+        for attention planes — one fused update, not a per-position loop)
+        and emit the first token; ``t_first`` lands this same tick."""
+        mb = self.mbs[mb_i]
+        pf = mb.prefill.pop(slot)
+        req = pf.req
+        n_tok = min(len(req.prompt), self._kv_ring_len)
+        for li in range(len(mb.caches)):
+            src = pf.caches[li]
+            if self.rt.specs[li].kind == "attn" and n_tok < self._kv_ring_len:
+                src = {kk: vv[:, :n_tok] for kk, vv in src.items()}
+            mb.caches[li] = splice_batch_slot(mb.caches[li], src, slot,
+                                              self.mb_slots)
+        mb.pos = mb.pos.at[slot].set(len(req.prompt))
+        first = self._select(logits[0, -1])
+        req.output.append(first)
+        mb.tokens[slot] = first
+        self.stats.prefills += 1
+        self.stats.tokens_out += 1
+        self._w_tokens_out += 1
+        if req.t_first < 0:
+            req.t_first = self.now
+        if req.done:
+            self._complete(mb, slot)
 
     # ---- fault tolerance / fleet drain hooks -------------------------------
 
@@ -479,6 +623,13 @@ class AFDServeEngine:
         req = mb.slots[slot]
         if req is not None:
             req.output.clear()
+        if slot in mb.prefill:
+            # mid-prefill evictions abandon the partial cache; the request
+            # restarts its prompt from scratch on re-admission
+            mb.prefill.pop(slot)
+            mb_i = self.mbs.index(mb)
+            self._prefill_fifo = collections.deque(
+                e for e in self._prefill_fifo if e != (mb_i, slot))
         mb.slots[slot] = None
         mb.tokens[slot] = PAD
         mb.pos = mb.pos.at[slot].set(0)
@@ -533,47 +684,59 @@ class AFDServeEngine:
     # ---- the decode tick ---------------------------------------------------
 
     def tick(self) -> int:
-        """One 3BO rotation over every micro-batch. Returns live count."""
+        """One engine tick: at most one prompt chunk (chunked-prefill mode)
+        interleaved with the 3BO decode rotation. Returns the number of
+        work units served (decode-live slots + prefill chunks run)."""
         self._drain_arrivals()
         self._admit()
-        live = self.live_count()
-        if live == 0:
+        wall0 = time.perf_counter()
+
+        ran_prefill, finished = 0, []
+        if self.prefill_policy is not None and self._prefill_fifo:
+            ran_prefill, finished = self._prefill_tick()
+
+        decode_live = self.decode_live_count()
+        if decode_live == 0 and ran_prefill == 0:
             return 0
 
-        wall0 = time.perf_counter()
-        outs = self.rt.decode_step_3bo(
-            [(jnp.asarray(mb.tokens), mb.caches, mb.pos)
-             for mb in self.mbs], n_bo=self.n_bo)
+        outs = None
+        if decode_live:
+            outs = self.rt.decode_step_3bo(
+                [(jnp.asarray(mb.tokens), mb.caches, mb.pos)
+                 for mb in self.mbs], n_bo=self.n_bo)
 
         dt = self._tick_duration(wall0)
         self.now += dt
         if self.scheduler is not None:
             self.scheduler.observe(dt)
 
-        for mb, (logits, caches, pos) in zip(self.mbs, outs):
-            mb.caches, mb.pos = caches, pos
-            nxt = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
-            for i in mb.live():
-                req = mb.slots[i]
-                tok = int(nxt[i]) if self.greedy else self._select(logits[i])
-                req.output.append(tok)
-                mb.tokens[i] = tok
-                self.stats.tokens_out += 1
-                self._w_tokens_out += 1
-                if req.done or int(mb.pos[i]) >= self.max_len - 1:
-                    req.t_done = self.now
-                    self.completed.append(req)
-                    self._w_completed.append(req)
-                    self.stats.completed += 1
-                    mb.slots[i] = None
-                    mb.tokens[i] = PAD
-                    mb.pos = mb.pos.at[i].set(0)
+        if outs is not None:
+            for mb, (logits, caches, pos) in zip(self.mbs, outs):
+                mb.caches, mb.pos = caches, pos
+                nxt = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
+                for i in mb.live():
+                    req = mb.slots[i]
+                    tok = (int(nxt[i]) if self.greedy
+                           else self._select(logits[i]))
+                    req.output.append(tok)
+                    mb.tokens[i] = tok
+                    self.stats.tokens_out += 1
+                    self._w_tokens_out += 1
+                    if req.done or int(mb.pos[i]) >= self.max_len - 1:
+                        self._complete(mb, i)
+            self.stats.decode_ticks += 1
+            self._w_decode_ticks += 1
 
-        self.stats.decode_ticks += 1
+        # Prefills that finished this tick: splice + first token now, so
+        # t_first lands in the tick the logits were produced.
+        for mb_i, slot, logits in finished:
+            self._finish_prefill(mb_i, slot, logits)
+
+        self.stats.engine_ticks += 1
         self._w_ticks += 1
         if self._w_ticks >= self.window_ticks:
             self._close_window()
-        return live
+        return decode_live + ran_prefill
 
     # ---- the serve loop ----------------------------------------------------
 
@@ -581,7 +744,10 @@ class AFDServeEngine:
             max_ticks: int = 100_000) -> List[WindowRecord]:
         """Serve an open-loop trace to completion (or ``max_ticks``)."""
         self.trace = collections.deque(sorted(trace, key=lambda e: e.t))
-        while self.stats.decode_ticks < max_ticks:
+        # engine_ticks counts prefill-only ticks too, so a chunked-prefill
+        # backlog can't spin past the budget without decode progress
+        # (legacy mode: engine_ticks == decode_ticks, identical behavior).
+        while self.stats.engine_ticks < max_ticks:
             if (not self.trace and not self.queue
                     and self.live_count() == 0):
                 break
@@ -608,7 +774,12 @@ class AFDServeEngine:
             "arrivals": self.stats.arrivals,
             "completed": self.stats.completed,
             "decode_ticks": self.stats.decode_ticks,
+            "engine_ticks": self.stats.engine_ticks,
             "prefills": self.stats.prefills,
+            "prefill_tokens": self.stats.prefill_tokens,
+            "prefill_chunks": self.stats.prefill_chunks,
+            "prefill_chunk": self.prefill_chunk,
+            "ttft_mean": float(np.mean(ttfts)) if ttfts else None,
             "tokens_out": self.stats.tokens_out,
             "duration_s": self.now,
             "throughput_tps": self.stats.tokens_out / dur,

@@ -45,7 +45,8 @@ def failure_drain_count(frac_nodes_lost: float, n_slots: int) -> int:
     return min(n_slots, math.ceil(frac_nodes_lost * n_slots - 1e-12))
 
 
-def splice_batch_slot(dst_tree, src_tree, slot: int, n_slots: int):
+def splice_batch_slot(dst_tree, src_tree, slot: int, n_slots: int,
+                      t_offset: int = 0):
     """Write a 1-sequence cache pytree into batch position ``slot``.
 
     The batch axis is identified explicitly: the axis where ``dst`` has
@@ -53,21 +54,37 @@ def splice_batch_slot(dst_tree, src_tree, slot: int, n_slots: int):
     Matching on whole-shape inequality is wrong at ``n_slots == 1`` (the
     two shapes coincide and the splice silently becomes a no-op, leaving
     decode running on a stale/zero cache).
+
+    Token slabs: a ``src`` leaf may additionally be *shorter* than ``dst``
+    along exactly one further axis — it is written as a contiguous slab
+    starting at ``t_offset`` on that axis, in one fused update instead of a
+    Python loop of single-position writes. Equal-shape leaves keep the
+    original whole-slot semantics, so every existing caller is unchanged.
     """
     def splice(dst, src):
         if dst.ndim == 0:
             return dst
         for ax in range(dst.ndim):
+            if not (dst.shape[ax] == n_slots and src.shape[ax] == 1):
+                continue
             rest_dst = dst.shape[:ax] + dst.shape[ax + 1:]
             rest_src = src.shape[:ax] + src.shape[ax + 1:]
-            if (dst.shape[ax] == n_slots and src.shape[ax] == 1
-                    and rest_dst == rest_src):
-                idx = [slice(None)] * dst.ndim
-                idx[ax] = slot
-                src_idx = [slice(None)] * src.ndim
-                src_idx[ax] = 0
+            idx = [slice(None)] * dst.ndim
+            idx[ax] = slot
+            src_idx = [slice(None)] * src.ndim
+            src_idx[ax] = 0
+            if rest_dst == rest_src:
                 return dst.at[tuple(idx)].set(
                     src[tuple(src_idx)].astype(dst.dtype))
+            diff = [i for i, (a, b) in enumerate(zip(rest_dst, rest_src))
+                    if a != b]
+            if len(diff) == 1:
+                tax = diff[0] + (1 if diff[0] >= ax else 0)  # dst axis id
+                n = src.shape[tax]
+                if n < dst.shape[tax] and t_offset + n <= dst.shape[tax]:
+                    idx[tax] = slice(t_offset, t_offset + n)
+                    return dst.at[tuple(idx)].set(
+                        src[tuple(src_idx)].astype(dst.dtype))
         return dst
     return jax.tree_util.tree_map(splice, dst_tree, src_tree)
 

@@ -1,0 +1,299 @@
+"""Batched + chunked prefill: AFDRuntime.prefill bit-exactness vs
+token-by-token teacher forcing, the chunked-prefill engine scheduler
+(TTFT/TPOT trade, exact byte accounting on mixed windows, deterministic
+interleaving), slab cache splices, and the ring-buffer chunk writer."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import planner as pln
+from repro.models import kvcache
+from repro.models.model import make_model
+from repro.parallel.afd import AFDRuntime
+from repro.serving.afd_engine import AFDServeEngine
+from repro.serving.engine import splice_batch_slot
+from repro.serving.scheduler import ChunkedPrefillPolicy
+from repro.serving.workload import ArrivalEvent, generate_trace, get_profile
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    cfg = configs.get_smoke_config("granite-moe-1b-a400m")
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def make_runtime(moe_setup):
+    cfg, params = moe_setup
+    devs = jax.devices()
+    return AFDRuntime(cfg, params, [devs[0]], [devs[-1]])
+
+
+def make_engine(moe_setup, **kw):
+    kw.setdefault("max_len", 32)
+    kw.setdefault("n_bo", 2)
+    kw.setdefault("mb_slots", 2)
+    kw.setdefault("tick_seconds", 0.01)
+    kw.setdefault("window_ticks", 8)
+    return AFDServeEngine(make_runtime(moe_setup), **kw)
+
+
+# ---- runtime prefill ---------------------------------------------------------
+
+
+def _teacher_force(rt, tokens, max_len):
+    """Token-by-token decode_step reference: logits (B,S,V) + caches."""
+    caches, pos = rt.init_cache(tokens.shape[0], max_len)
+    outs = []
+    for j in range(tokens.shape[1]):
+        lg, caches, pos = rt.decode_step(tokens[:, j], caches, pos)
+        outs.append(lg)
+    return jnp.stack(outs, axis=1), caches, pos
+
+
+@pytest.mark.parametrize("chunk", [1, 3, 7, None])
+def test_prefill_bit_exact_vs_teacher_forcing(moe_setup, chunk):
+    """The tentpole invariant: batched chunked prefill produces logits AND
+    caches bit-identical to the sequential decode loop, at any chunking.
+    Chunk attention writes the whole chunk's KV first and masks per-row,
+    so each row's arithmetic is the same reduction as single-token decode."""
+    rt = make_runtime(moe_setup)
+    cfg, _ = moe_setup
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(1, cfg.vocab_size, size=(2, 7)),
+                         jnp.int32)
+    ref_lg, ref_caches, ref_pos = _teacher_force(rt, tokens, max_len=16)
+    caches, pos = rt.init_cache(2, 16)
+    lg, caches, pos = rt.prefill(tokens, caches, pos, chunk=chunk)
+    assert lg.shape == ref_lg.shape
+    assert bool(jnp.all(lg == ref_lg))
+    assert bool(jnp.all(pos == ref_pos))
+    for c, rc in zip(caches, ref_caches):
+        for k in c:
+            assert bool(jnp.all(c[k] == rc[k])), f"cache leaf {k} diverged"
+
+
+def test_prefill_bytes_equal_token_by_token(moe_setup):
+    """Eq. 9/17 is linear in the cycle's token count, so total prefill
+    wire bytes are chunking-invariant — and the window predictor
+    (predict_prefill_window_bytes) prices them exactly."""
+    cfg, _ = moe_setup
+    rng = np.random.default_rng(1)
+    tokens = jnp.asarray(rng.integers(1, cfg.vocab_size, size=(1, 12)),
+                         jnp.int32)
+    totals = []
+    for chunk in (1, 4, None):
+        rt = make_runtime(moe_setup)
+        caches, pos = rt.init_cache(1, 16)
+        rt.prefill(tokens, caches, pos, chunk=chunk)
+        totals.append((rt.stats.dispatch_bytes, rt.stats.combine_bytes))
+    assert totals[0] == totals[1] == totals[2]
+    moe_layers = sum(1 for s in make_runtime(moe_setup).specs if s.moe)
+    pf_d, pf_c = pln.predict_prefill_window_bytes(12, cfg.d_model, cfg.top_k)
+    assert totals[0] == (moe_layers * pf_d, moe_layers * pf_c)
+
+
+# ---- kvcache chunk writer ----------------------------------------------------
+
+
+def _mini_cfg(window):
+    cfg = configs.get_smoke_config("qwen1.5-0.5b")
+    import dataclasses
+    return dataclasses.replace(cfg, sliding_window=window)
+
+
+@pytest.mark.parametrize("window,chunk,start", [
+    (None, 3, 0), (None, 5, 2), (4, 3, 0), (4, 6, 1), (4, 9, 3)])
+def test_write_kv_chunk_matches_sequential(window, chunk, start):
+    """Chunk scatter == the write_kv loop, including ring wrap (chunk >
+    window) where sequential last-write-wins must be reproduced."""
+    cfg = _mini_cfg(window)
+    t = 4 if window else 16
+    b, nkv, dh = 2, cfg.n_kv_heads, cfg.d_head
+    rng = np.random.default_rng(0)
+    k_new = jnp.asarray(rng.normal(size=(b, chunk, nkv, dh)), jnp.float32)
+    v_new = jnp.asarray(rng.normal(size=(b, chunk, nkv, dh)), jnp.float32)
+    cache0 = {"k": jnp.zeros((b, t, nkv, dh)), "v": jnp.zeros((b, t, nkv, dh))}
+    pos = jnp.full((b,), start, jnp.int32)
+
+    seq = cache0
+    for j in range(chunk):
+        seq = kvcache.write_kv(cfg, seq, k_new[:, j:j + 1],
+                               v_new[:, j:j + 1], pos + j)
+    got = kvcache.write_kv_chunk(cfg, cache0, k_new, v_new, pos)
+    assert bool(jnp.all(got["k"] == seq["k"]))
+    assert bool(jnp.all(got["v"] == seq["v"]))
+
+
+@pytest.mark.parametrize("window", [None, 4])
+def test_valid_mask_chunk_rows_match_valid_mask(window):
+    """Row j of the chunk mask == valid_mask at cache_len pos+j."""
+    cfg = _mini_cfg(window)
+    t = 4 if window else 12
+    pos = jnp.asarray([0, 3], jnp.int32)
+    chunk = 5
+    m = kvcache.valid_mask_chunk(cfg, t, pos, chunk)
+    for j in range(chunk):
+        ref = kvcache.valid_mask(cfg, t, pos + j)
+        assert bool(jnp.all(m[:, j] == ref))
+
+
+# ---- slab splice -------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_tok", [1, 2, 5])
+def test_splice_slab_matches_looped_single_positions(n_tok):
+    """A (1, n_tok, ...) slab splice == n_tok single-position splices."""
+    rng = np.random.default_rng(0)
+    dst = {"k": jnp.asarray(rng.normal(size=(3, 8, 2, 4)), jnp.float32),
+           "pos": jnp.zeros((3,), jnp.int32)}
+    src_full = jnp.asarray(rng.normal(size=(1, n_tok, 2, 4)), jnp.float32)
+
+    slab = splice_batch_slot(
+        {"k": dst["k"]}, {"k": src_full}, slot=1, n_slots=3)
+    looped = dst["k"]
+    for j in range(n_tok):
+        looped = splice_batch_slot(
+            {"k": looped}, {"k": src_full[:, j:j + 1]}, slot=1, n_slots=3,
+            t_offset=j)["k"]
+    assert bool(jnp.all(slab["k"] == looped))
+    # untouched slots and positions beyond the slab are preserved
+    assert bool(jnp.all(slab["k"][0] == dst["k"][0]))
+    assert bool(jnp.all(slab["k"][1, n_tok:] == dst["k"][1, n_tok:]))
+
+
+def test_splice_slab_offset():
+    dst = jnp.zeros((2, 6, 3))
+    src = jnp.ones((1, 2, 3))
+    out = splice_batch_slot(dst, src, slot=0, n_slots=2, t_offset=3)
+    assert bool(jnp.all(out[0, 3:5] == 1.0))
+    assert float(out.sum()) == 2 * 3
+
+
+# ---- chunked engine scheduler ------------------------------------------------
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        ChunkedPrefillPolicy(chunk=0)
+    with pytest.raises(ValueError):
+        ChunkedPrefillPolicy(chunk=4, max_chunks_per_tick=0)
+    assert ChunkedPrefillPolicy(chunk=4).next_chunk(10) == 4
+    assert ChunkedPrefillPolicy(chunk=4).next_chunk(3) == 3
+
+
+def _run(moe_setup, trace, **kw):
+    eng = make_engine(moe_setup, **kw)
+    windows = eng.run(trace, max_ticks=2000)
+    return eng, windows
+
+
+def test_chunked_outputs_match_legacy(moe_setup):
+    """Chunked prefill is a scheduling change, not a numerics change:
+    every request's output tokens must match the token-by-token engine."""
+    trace = generate_trace(get_profile("poisson-burst"), seed=0,
+                           max_requests=10)
+    leg, _ = _run(moe_setup, trace)
+    chk, _ = _run(moe_setup, trace, prefill_chunk=64)
+    assert leg.stats.completed == chk.stats.completed == 10
+    out_l = {r.rid: tuple(r.output) for r in leg.completed}
+    out_c = {r.rid: tuple(r.output) for r in chk.completed}
+    assert out_l == out_c
+
+
+def test_chunked_fewer_cycles_and_lower_ttft(moe_setup):
+    """The acceptance criterion: chunk ≥ 64 on the smoke trace gives ≥4×
+    fewer prefill M2N cycles and strictly lower mean TTFT."""
+    trace = generate_trace(get_profile("poisson-burst"), seed=0,
+                           max_requests=10)
+    leg, _ = _run(moe_setup, trace)
+    chk, _ = _run(moe_setup, trace, prefill_chunk=64)
+    assert leg.stats.prefill_tokens == chk.stats.prefill_tokens
+    assert leg.stats.prefill_chunks >= 4 * chk.stats.prefill_chunks
+    assert chk.summary()["ttft_mean"] < leg.summary()["ttft_mean"]
+
+
+def test_chunked_bytes_exact_on_mixed_windows(moe_setup):
+    """Windows mixing decode ticks with prefill chunks must still price
+    to the byte: decode term (ticks · n_bo · cycle bytes) plus the
+    chunk-invariant prefill term (predict_prefill_window_bytes)."""
+    trace = generate_trace(get_profile("poisson-steady"), seed=1,
+                           max_requests=10)
+    eng, windows = _run(moe_setup, trace, prefill_chunk=8)
+    assert eng.stats.completed == 10
+    assert any(w.prefill_tokens and w.ticks for w in windows), \
+        "trace produced no mixed prefill+decode window"
+    for w in windows:
+        assert w.dispatch_bytes == w.predicted_dispatch_bytes
+        assert w.combine_bytes == w.predicted_combine_bytes
+    pred_d, pred_c = eng.predicted_wire_bytes()
+    assert (eng.rt.stats.dispatch_bytes, eng.rt.stats.combine_bytes) \
+        == (pred_d, pred_c)
+
+
+def test_chunked_interleaving_deterministic(moe_setup):
+    """Two runs of the same trace interleave identically: same window
+    records, same timestamps, same outputs."""
+    trace = generate_trace(get_profile("poisson-burst"), seed=3,
+                           max_requests=8)
+    a, wa = _run(moe_setup, trace, prefill_chunk=4)
+    b, wb = _run(moe_setup, trace, prefill_chunk=4)
+    assert [(r.rid, r.t_first, r.t_done, tuple(r.output))
+            for r in a.completed] \
+        == [(r.rid, r.t_first, r.t_done, tuple(r.output))
+            for r in b.completed]
+    assert [(w.ticks, w.prefill_chunks, w.dispatch_bytes) for w in wa] \
+        == [(w.ticks, w.prefill_chunks, w.dispatch_bytes) for w in wb]
+
+
+def test_chunked_small_chunk_ttft_scales(moe_setup):
+    """TTFT is O(prompt/chunk) ticks: chunk=2 sits between token-by-token
+    and one-shot prefill on a long-prompt request."""
+    trace = [ArrivalEvent(rid=0, t=0.0, prompt_len=8, max_new_tokens=2)]
+    leg, _ = _run(moe_setup, trace)
+    mid, _ = _run(moe_setup, trace, prefill_chunk=2)
+    big, _ = _run(moe_setup, trace, prefill_chunk=64)
+    t_leg = leg.completed[0].ttft
+    t_mid = mid.completed[0].ttft
+    t_big = big.completed[0].ttft
+    assert t_big < t_mid < t_leg
+
+
+def test_prefill_single_ttft_same_tick_regression(moe_setup):
+    """Satellite regression: a max_new_tokens=1 request completes at
+    admission — t_first == t_done on the admission tick, exactly one
+    output token, and the slot frees immediately (legacy path)."""
+    trace = [ArrivalEvent(rid=0, t=0.0, prompt_len=4, max_new_tokens=1)]
+    eng, _ = _run(moe_setup, trace)
+    assert eng.stats.completed == 1
+    req = eng.completed[0]
+    assert len(req.output) == 1
+    assert req.t_first == req.t_done
+    assert req.t_first >= req.t_arrive
+    assert eng.live_count() == 0
+
+
+def test_chunked_single_token_request(moe_setup):
+    """Same regression on the chunked path: prefill finishes, the first
+    token completes the request, the slot frees."""
+    trace = [ArrivalEvent(rid=0, t=0.0, prompt_len=4, max_new_tokens=1)]
+    eng, _ = _run(moe_setup, trace, prefill_chunk=2)
+    assert eng.stats.completed == 1
+    req = eng.completed[0]
+    assert len(req.output) == 1
+    assert req.t_first == req.t_done
+    assert eng.live_count() == 0
+
+
+def test_prefill_backlog_and_view_fields(moe_setup):
+    """The fleet-facing accessors: chunked engines expose their chunk size
+    and admitted-but-unprefilled token backlog."""
+    eng = make_engine(moe_setup, prefill_chunk=2)
+    assert eng.prefill_chunk == 2
+    assert eng.prefill_backlog_tokens() == 0
+    legacy = make_engine(moe_setup)
+    assert legacy.prefill_chunk is None

@@ -24,3 +24,29 @@ assert all(w["hfu_measured"] is not None
 print(f"serve smoke OK: {s['completed']} requests, "
       f"{len(doc['windows'])} windows, HFU records present")
 EOF
+
+# Chunked prefill: same trace, prompts pushed through the M2N cycle in
+# 64-token chunks interleaved with decode ticks. Must finish every
+# request with ≥4× fewer prefill cycles, strictly lower mean TTFT, and
+# the byte predictor still exact.
+python -m repro serve-traffic \
+  --profile poisson-burst --max-requests 10 --seed 0 \
+  --policy off --prefill-chunk 64 \
+  --json serve_chunked.json
+
+python - <<'EOF'
+import json
+legacy = json.load(open("serve.json"))["summary"]
+s = json.load(open("serve_chunked.json"))["summary"]
+assert s["bytes_match_all"] is True, "chunked M2N bytes diverged"
+assert s["completed"] == legacy["arrivals"], "chunked run lost requests"
+assert s["prefill_tokens"] == legacy["prefill_tokens"]
+ratio = legacy["prefill_chunks"] / max(s["prefill_chunks"], 1)
+assert ratio >= 4.0, f"prefill cycle ratio {ratio:.2f} < 4"
+assert s["ttft_mean"] < legacy["ttft_mean"], (
+    f"chunked TTFT {s['ttft_mean']:.4f} not below "
+    f"legacy {legacy['ttft_mean']:.4f}")
+print(f"chunked serve smoke OK: {s['completed']} requests, "
+      f"{ratio:.1f}x fewer prefill cycles, "
+      f"TTFT {legacy['ttft_mean']:.4f} -> {s['ttft_mean']:.4f}")
+EOF
